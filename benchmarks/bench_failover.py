@@ -1,0 +1,58 @@
+"""Paper Fig 8: node failure at 50% progress; slowdown = (T_f - T_b)/T_b.
+Compares Hadoop, HAIL (3 different indexes — failed blocks fall back to
+scan) and HAIL-1Idx (same index on all replicas — failover keeps index
+scans)."""
+from __future__ import annotations
+
+from benchmarks.common import CLUSTER, NODES, bob_query, uservisits_raw
+from repro.core import mapreduce as mr
+from repro.core import schema as sc
+from repro.core import upload as up
+
+
+def _slowdown(store, query, **kw):
+    mr.run_job(store, query, cluster=CLUSTER, **kw)           # warm
+    base = mr.run_job(store, query, cluster=CLUSTER, **kw)
+    fail = mr.run_job(store, query, cluster=CLUSTER, fail_node_at=0.5, **kw)
+    assert fail.results["n_rows"] == base.results["n_rows"]
+    slow = (fail.end_to_end_s - base.end_to_end_s) / base.end_to_end_s * 100
+    return base, fail, slow
+
+
+def run():
+    rows = []
+    query = bob_query("Bob-Q1")
+    _, raw = uservisits_raw()
+
+    hdfs, _ = up.hdfs_upload(sc.USERVISITS, raw, n_nodes=NODES)
+    b, f, s = _slowdown(hdfs, query)
+    rows.append(("fig8_hadoop", f.end_to_end_s * 1e6,
+                 f"slowdown_pct={s:.1f};rescheduled={f.rescheduled_tasks}"))
+
+    hail, _ = up.hail_upload(sc.USERVISITS, raw,
+                             ["visitDate", "sourceIP", "adRevenue"],
+                             n_nodes=NODES)
+    b, f, s = _slowdown(hail, query, splitting="hail")
+    rows.append(("fig8_hail_3idx", f.end_to_end_s * 1e6,
+                 f"slowdown_pct={s:.1f};rescheduled={f.rescheduled_tasks}"))
+
+    one, _ = up.hail_upload(sc.USERVISITS, raw,
+                            ["visitDate", "visitDate", "visitDate"],
+                            n_nodes=NODES)
+    b, f, s = _slowdown(one, query, splitting="hail")
+    rows.append(("fig8_hail_1idx", f.end_to_end_s * 1e6,
+                 f"slowdown_pct={s:.1f};rescheduled={f.rescheduled_tasks}"))
+
+    # straggler mitigation (beyond-paper runtime feature, same control plane)
+    from repro.runtime.cluster import SimulatedCluster
+    from repro.runtime.scheduler import Task, run_schedule
+    tasks = [Task(i, 5.0, preferred_nodes=(i % 8, (i + 3) % 8))
+             for i in range(16)]
+    kw = dict(n_nodes=8, map_slots=2, straggler_frac=0.25, straggler_slow=5.0,
+              seed=2)
+    nospec = run_schedule(tasks, SimulatedCluster(**kw), spec_factor=None)
+    spec = run_schedule(tasks, SimulatedCluster(**kw), spec_factor=1.5)
+    rows.append(("fig8x_straggler_speculation", spec.makespan_s * 1e6,
+                 f"makespan_reduction={nospec.makespan_s / spec.makespan_s:.2f};"
+                 f"speculative={spec.n_speculative}"))
+    return rows

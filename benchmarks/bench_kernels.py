@@ -1,0 +1,57 @@
+"""Pallas kernels: interpret-mode correctness + us/call vs jnp oracle.
+(Interpret mode executes the kernel body in Python — timings demonstrate the
+harness, not TPU performance; the TPU path flips interpret=False.)"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timed
+from repro.kernels import ref
+from repro.kernels.block_sort import bitonic_sort
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.index_search import index_search
+from repro.kernels.pax_scan import pax_scan
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run():
+    rows = []
+    keys = jax.random.randint(KEY, (4, 1024), 0, 1 << 20, dtype=jnp.int32)
+    t, _ = timed(lambda: bitonic_sort(keys))
+    tr, _ = timed(lambda: jax.vmap(ref.sort_by_key)(keys))
+    rows.append(("kernel_block_sort_4x1024", t * 1e6, f"ref_us={tr * 1e6:.0f}"))
+
+    mins = jnp.sort(jax.random.randint(KEY, (64, 64), 0, 1 << 20,
+                                       dtype=jnp.int32), axis=1)
+    t, _ = timed(lambda: index_search(mins, 1000, 100000))
+    tr, _ = timed(lambda: ref.index_search(mins, 1000, 100000))
+    rows.append(("kernel_index_search_64x64", t * 1e6, f"ref_us={tr * 1e6:.0f}"))
+
+    kc = jax.random.randint(KEY, (8192,), 0, 1 << 20, dtype=jnp.int32)
+    pj = jax.random.randint(KEY, (8192, 4), 0, 99, dtype=jnp.int32)
+    t, _ = timed(lambda: pax_scan(kc, pj, 0, 1 << 18))
+    tr, _ = timed(lambda: ref.pax_scan(kc, pj, 0, 1 << 18))
+    rows.append(("kernel_pax_scan_8192x4", t * 1e6, f"ref_us={tr * 1e6:.0f}"))
+
+    q = jax.random.normal(KEY, (1, 256, 4, 64), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 256, 2, 64))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (1, 256, 2, 64))
+    t, _ = timed(lambda: flash_attention(q, k, v, block_q=128, block_k=128))
+    tr, _ = timed(lambda: ref.attention(q, k, v))
+    rows.append(("kernel_flash_attn_256", t * 1e6, f"ref_us={tr * 1e6:.0f}"))
+
+    from repro.kernels.selective_scan import selective_scan
+    ks = [jax.random.fold_in(KEY, 10 + i) for i in range(5)]
+    delta = jax.nn.softplus(jax.random.normal(ks[0], (1, 64, 32)))
+    x2 = jax.random.normal(ks[1], (1, 64, 32))
+    b2 = jax.random.normal(ks[2], (1, 64, 8))
+    c2 = jax.random.normal(ks[3], (1, 64, 8))
+    a2 = -jnp.exp(jax.random.normal(ks[4], (32, 8)) * 0.3)
+    t, _ = timed(lambda: selective_scan(delta, x2, b2, c2, a2,
+                                        chunk=16, d_block=16))
+    tr, _ = timed(lambda: ref.selective_scan(delta, x2, b2, c2, a2))
+    rows.append(("kernel_selective_scan_64x32", t * 1e6,
+                 f"ref_us={tr * 1e6:.0f}"))
+    return rows

@@ -1,0 +1,66 @@
+"""Paper Fig 6 (Bob workload) + Fig 7 (Synthetic selectivities): end-to-end
+job runtimes, RecordReader times, framework overhead.  HailSplitting is
+DISABLED here (paper §6.4 isolates index benefits; §6.5 re-enables it —
+see bench_splitting)."""
+from __future__ import annotations
+
+from benchmarks.common import (BLOCKS, CLUSTER, NODES, SYN_QUERIES, bob_query,
+                               hadooppp_store_uv, hail_store_uv, hdfs_store_uv,
+                               synthetic_raw)
+from repro.core import mapreduce as mr
+from repro.core import schema as sc
+from repro.core import upload as up
+from repro.core.query import HailQuery
+
+
+def _job(store, query, warm: bool = True, **kw):
+    if warm:
+        mr.run_job(store, query, cluster=CLUSTER, **kw)
+    return mr.run_job(store, query, cluster=CLUSTER, **kw)
+
+
+def run():
+    rows = []
+    hail, _ = hail_store_uv()
+    hdfs, _ = hdfs_store_uv()
+    hpp, _ = hadooppp_store_uv()
+    for name in ("Bob-Q1", "Bob-Q2", "Bob-Q3", "Bob-Q4", "Bob-Q5"):
+        query = bob_query(name)
+        jh = _job(hdfs, query)
+        jp = _job(hpp, query, splitting="hadoop")
+        ja = _job(hail, query, splitting="hadoop")   # splitting disabled
+        rows.append((f"fig6_{name}_hadoop", jh.end_to_end_s * 1e6,
+                     f"rr_us={jh.record_reader_s * 1e6:.0f};speedup=1.00"))
+        rows.append((f"fig6_{name}_hadooppp", jp.end_to_end_s * 1e6,
+                     f"rr_us={jp.record_reader_s * 1e6:.0f};"
+                     f"speedup={jh.end_to_end_s / jp.end_to_end_s:.2f}"))
+        rows.append((f"fig6_{name}_hail", ja.end_to_end_s * 1e6,
+                     f"rr_us={ja.record_reader_s * 1e6:.0f};"
+                     f"speedup={jh.end_to_end_s / ja.end_to_end_s:.2f};"
+                     f"rr_speedup={jh.record_reader_s / ja.record_reader_s:.1f}"))
+        # Fig 6c: framework overhead fraction
+        ov = ja.overhead_s / (CLUSTER.n_nodes * CLUSTER.map_slots)
+        rows.append((f"fig6c_{name}_hail_overhead", ov * 1e6,
+                     f"overhead_frac={ov / ja.end_to_end_s:.2f}"))
+
+    # Fig 7: Synthetic — all queries filter attr0; HAIL indexes attr0/1/2
+    _, raw = synthetic_raw()
+    up.hail_upload(sc.SYNTHETIC, raw[:2], ["attr0", "attr1", "attr2"],
+                   n_nodes=NODES)
+    syn_store, _ = up.hail_upload(sc.SYNTHETIC, raw,
+                                  ["attr0", "attr1", "attr2"], n_nodes=NODES)
+    syn_hdfs, _ = up.hdfs_upload(sc.SYNTHETIC, raw, n_nodes=NODES)
+    spp, _ = up.hadooppp_upload(sc.SYNTHETIC, raw, "attr0", n_nodes=NODES)
+    for name, (col, lo, hi, proj) in SYN_QUERIES.items():
+        query = HailQuery(filter=(col, lo, hi), projection=proj)
+        jh = _job(syn_hdfs, query)
+        jp = _job(spp, query, splitting="hadoop")
+        ja = _job(syn_store, query, splitting="hadoop")
+        rows.append((f"fig7_{name}_hadoop", jh.end_to_end_s * 1e6,
+                     f"rr_us={jh.record_reader_s * 1e6:.0f}"))
+        rows.append((f"fig7_{name}_hadooppp", jp.end_to_end_s * 1e6,
+                     f"rr_us={jp.record_reader_s * 1e6:.0f}"))
+        rows.append((f"fig7_{name}_hail", ja.end_to_end_s * 1e6,
+                     f"rr_us={ja.record_reader_s * 1e6:.0f};"
+                     f"speedup={jh.end_to_end_s / ja.end_to_end_s:.2f}"))
+    return rows

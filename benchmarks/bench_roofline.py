@@ -1,0 +1,52 @@
+"""Roofline table from the dry-run artifacts (framework deliverable g).
+Reads artifacts/dryrun/*.json; derived column = dominant term + roofline
+fraction (MODEL_FLOPS-based MFU upper bound at the step's bound)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_cells(mesh: str = "single", tag: str = ""):
+    cells = {}
+    for f in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        r = json.load(open(f))
+        if r.get("mesh") != mesh or r.get("tag", "") != tag or "error" in r:
+            continue
+        cells[(r["arch"], r["shape"])] = r
+    return cells
+
+
+def run():
+    rows = []
+    base = load_cells("single", "")
+    opt = load_cells("single", "vopt")
+    for label, cells in (("base", base), ("opt", opt)):
+        for (arch, shape), r in sorted(cells.items()):
+            t = r["roofline"]
+            frac = r.get("roofline_fraction")
+            rows.append((
+                f"roofline[{label}]_{arch}_{shape}",
+                t["step_lower_bound_s"] * 1e6,
+                f"dominant={t['dominant']};compute_s={t['compute_s']:.3g};"
+                f"memory_s={t['memory_s']:.3g};coll_s={t['collective_s']:.3g};"
+                f"mfu_bound={frac if frac is None else round(frac, 4)};"
+                f"model/hlo={round(r.get('model_over_hlo_flops') or 0, 3)}"))
+    # §Perf summary: baseline vs optimized step-bound speedup
+    import numpy as np
+    logs = [np.log(base[k]["roofline"]["step_lower_bound_s"]
+                   / opt[k]["roofline"]["step_lower_bound_s"])
+            for k in base if k in opt]
+    if logs:
+        rows.append(("perf_geomean_bound_speedup", 0.0,
+                     f"opt_vs_baseline={np.exp(np.mean(logs)):.2f}x_over_"
+                     f"{len(logs)}_cells"))
+    # multi-pod pass/fail summary
+    for label, tag in (("base", ""), ("opt", "vopt")):
+        multi = load_cells("multi", tag)
+        rows.append((f"dryrun_multi_pod_cells[{label}]", 0.0,
+                     f"compiled_ok={len(multi)}"))
+    return rows

@@ -1,0 +1,53 @@
+"""Paper Table 2 (scale-up) + Fig 5 (scale-out).
+
+Scale-up: EC2 node classes differ in CPU speed and disks; we model node
+classes as (compute_factor, disk_bw, disks) and combine with the measured
+parse/sort/index compute — HAIL gains more from better CPUs because its
+upload is compute-heavy while Hadoop's is I/O-bound (the paper's point).
+
+Scale-out: constant data per node; per-node work is constant, so modeled
+upload time stays flat while aggregate throughput scales linearly.
+"""
+from __future__ import annotations
+
+from benchmarks.common import NODES, synthetic_raw, uservisits_raw
+from repro.core import schema as sc
+from repro.core import upload as up
+
+# (name, cpu_factor, disk_bw per node)
+NODE_CLASSES = [("large", 0.5, 60e6), ("xlarge", 0.8, 80e6),
+                ("quadruple", 1.0, 100e6), ("physical", 1.2, 120e6)]
+
+
+def _stats(schema, raw, keys):
+    up.hail_upload(schema, raw[:2], keys, n_nodes=NODES)
+    _, s = up.hail_upload(schema, raw, keys, n_nodes=NODES)
+    return s
+
+
+def run():
+    rows = []
+    for tag, (_, raw), schema, keys in (
+            ("uservisits", uservisits_raw(), sc.USERVISITS,
+             ["visitDate", "sourceIP", "adRevenue"]),
+            ("synthetic", synthetic_raw(), sc.SYNTHETIC,
+             ["attr0", "attr1", "attr2"])):
+        hail = _stats(schema, raw, keys)
+        _, hadoop = up.hdfs_upload(schema, raw, n_nodes=NODES)
+        from benchmarks.common import upload_model_seconds
+        for name, cpu, disk in NODE_CLASSES:
+            h_t = upload_model_seconds(hadoop, disk_bw=disk, cpu_factor=cpu)
+            a_t = upload_model_seconds(hail, disk_bw=disk, cpu_factor=cpu)
+            rows.append((f"table2_{tag}_{name}", a_t * 1e6,
+                         f"system_speedup={h_t / a_t:.2f}"))
+    # Fig 5: scale-out, constant per-node data
+    _, raw = synthetic_raw()
+    hail = _stats(sc.SYNTHETIC, raw, ["attr0", "attr1", "attr2"])
+    per_node_bytes = hail.written_bytes / NODES
+    per_node_compute = hail.wall_s / (NODES * 4)
+    for n in (10, 50, 100):
+        t = max(per_node_compute, per_node_bytes / 100e6)
+        thru = n * per_node_bytes / t / 1e6
+        rows.append((f"fig5_scaleout_{n}nodes", t * 1e6,
+                     f"aggregate_MBps={thru:.0f}"))
+    return rows

@@ -1,0 +1,52 @@
+"""Paper Fig 9 + §6.5: HailSplitting impact on end-to-end job runtimes.
+Uses a block-heavy store (many small blocks) so the per-task scheduling
+overhead dominates, as in the paper's 3,200-task jobs."""
+from __future__ import annotations
+
+from benchmarks.common import CLUSTER, NODES, bob_query
+from repro.core import mapreduce as mr
+from repro.core import schema as sc
+from repro.core import upload as up
+from repro.core.parse import format_rows
+
+BLOCKS, ROWS = 160, 1024
+
+
+def _store():
+    cols = sc.gen_uservisits(BLOCKS * ROWS, seed=3)
+    raw = format_rows(sc.USERVISITS, cols).reshape(BLOCKS, ROWS, -1)
+    up.hail_upload(sc.USERVISITS, raw[:2],
+                   ["visitDate", "sourceIP", "adRevenue"], n_nodes=NODES)
+    store, _ = up.hail_upload(sc.USERVISITS, raw,
+                              ["visitDate", "sourceIP", "adRevenue"],
+                              partition_size=256, n_nodes=NODES)
+    hdfs, _ = up.hdfs_upload(sc.USERVISITS, raw, n_nodes=NODES)
+    return store, hdfs
+
+
+def run():
+    rows = []
+    store, hdfs = _store()
+    total_speedups = {"hail": [], "hadoop": []}
+    for name in ("Bob-Q1", "Bob-Q2", "Bob-Q4", "Bob-Q5"):
+        query = bob_query(name)
+        mr.run_job(store, query, splitting="hail", cluster=CLUSTER)  # warm
+        on = mr.run_job(store, query, splitting="hail", cluster=CLUSTER)
+        off = mr.run_job(store, query, splitting="hadoop", cluster=CLUSTER)
+        had = mr.run_job(hdfs, query, cluster=CLUSTER)
+        assert on.results["n_rows"] == off.results["n_rows"] == had.results["n_rows"]
+        rows.append((f"fig9_{name}_hailsplit_on", on.end_to_end_s * 1e6,
+                     f"tasks={on.n_tasks};speedup_vs_hadoop="
+                     f"{had.end_to_end_s / on.end_to_end_s:.1f}"))
+        rows.append((f"fig9_{name}_hailsplit_off", off.end_to_end_s * 1e6,
+                     f"tasks={off.n_tasks};speedup_vs_hadoop="
+                     f"{had.end_to_end_s / off.end_to_end_s:.1f}"))
+        rows.append((f"fig9_{name}_hadoop", had.end_to_end_s * 1e6,
+                     f"tasks={had.n_tasks}"))
+        total_speedups["hail"].append(had.end_to_end_s / on.end_to_end_s)
+        total_speedups["hadoop"].append(1.0)
+    import numpy as np
+    rows.append(("fig9c_workload_geomean_speedup",
+                 0.0,
+                 f"hail_vs_hadoop={np.exp(np.mean(np.log(total_speedups['hail']))):.1f}x"))
+    return rows

@@ -1,0 +1,49 @@
+"""Paper Fig 4: upload times vs #indexes (a: UserVisits, b: Synthetic) and
+vs replication factor (c)."""
+from __future__ import annotations
+
+from benchmarks.common import (NODES, synthetic_raw, upload_model_seconds,
+                               uservisits_raw)
+from repro.core import schema as sc
+from repro.core import upload as up
+
+KEYS = ["visitDate", "sourceIP", "adRevenue", "duration", "searchWord",
+        "countryCode"]
+SKEYS = [f"attr{i}" for i in range(8)]
+
+
+def _hail(schema, raw, keys):
+    up.hail_upload(schema, raw[:2], keys, n_nodes=NODES)      # warm
+    store, stats = up.hail_upload(schema, raw, keys, n_nodes=NODES)
+    return stats
+
+
+def run():
+    rows = []
+    for tag, (_, raw), schema, keys in (
+            ("uservisits", uservisits_raw(), sc.USERVISITS, KEYS),
+            ("synthetic", synthetic_raw(), sc.SYNTHETIC, SKEYS)):
+        _, h_stats = up.hdfs_upload(schema, raw, n_nodes=NODES)
+        base = upload_model_seconds(h_stats)
+        rows.append((f"fig4_{tag}_hadoop_0idx", base * 1e6,
+                     "speedup_vs_hadoop=1.00"))
+        _, pp_stats = up.hadooppp_upload(schema, raw, keys[0], n_nodes=NODES)
+        t = upload_model_seconds(pp_stats)
+        rows.append((f"fig4_{tag}_hadooppp_1idx", t * 1e6,
+                     f"speedup_vs_hadoop={base / t:.2f}"))
+        for n_idx in (0, 1, 2, 3):
+            ks = keys[:n_idx] + [None] * (3 - n_idx)
+            stats = _hail(schema, raw, ks)
+            t = upload_model_seconds(stats)
+            rows.append((f"fig4_{tag}_hail_{n_idx}idx", t * 1e6,
+                         f"speedup_vs_hadoop={base / t:.2f}"))
+    # Fig 4c: replication scaling on Synthetic, one index per replica
+    _, raw = synthetic_raw()
+    _, h_stats = up.hdfs_upload(sc.SYNTHETIC, raw, replication=3, n_nodes=NODES)
+    base3 = upload_model_seconds(h_stats)
+    for r in (1, 2, 3, 5, 6):
+        stats = _hail(sc.SYNTHETIC, raw, SKEYS[:r])
+        t = upload_model_seconds(stats)
+        rows.append((f"fig4c_hail_repl{r}", t * 1e6,
+                     f"vs_hadoop_repl3={base3 / t:.2f};indexes={r}"))
+    return rows

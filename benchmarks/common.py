@@ -1,0 +1,137 @@
+"""Shared benchmark plumbing: datasets, stores, timing, the cluster model.
+
+Methodology (documented per EXPERIMENTS.md): compute is MEASURED on this box
+(jit-warmed, second run); cluster effects (disk at the paper's 100MB/s,
+n-node parallelism, per-task scheduling seconds) are MODELED via
+core.mapreduce.ClusterModel.  Ratios between systems are the reproduction
+target; absolute seconds are simulation outputs.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import mapreduce as mr
+from repro.core import schema as sc
+from repro.core import upload as up
+from repro.core.parse import format_rows
+
+ROWS = 4096
+BLOCKS = 40
+NODES = 10
+CLUSTER = mr.ClusterModel(n_nodes=NODES, map_slots=4)
+
+_cache: dict = {}
+
+
+def uservisits_raw(blocks: int = BLOCKS, rows: int = ROWS):
+    key = ("uv", blocks, rows)
+    if key not in _cache:
+        cols = sc.gen_uservisits(rows * blocks, seed=0)
+        raw = format_rows(sc.USERVISITS, cols, bad_fraction=0.0005)
+        _cache[key] = (cols, raw.reshape(blocks, rows, -1))
+    return _cache[key]
+
+
+def synthetic_raw(blocks: int = BLOCKS, rows: int = ROWS):
+    key = ("syn", blocks, rows)
+    if key not in _cache:
+        cols = sc.gen_synthetic(rows * blocks, seed=0)
+        raw = format_rows(sc.SYNTHETIC, cols)
+        _cache[key] = (cols, raw.reshape(blocks, rows, -1))
+    return _cache[key]
+
+
+def hail_store_uv():
+    if "store_uv" not in _cache:
+        _, raw = uservisits_raw()
+        # warm the jit, then measure
+        up.hail_upload(sc.USERVISITS, raw[:2],
+                       ["visitDate", "sourceIP", "adRevenue"], n_nodes=NODES)
+        _cache["store_uv"] = up.hail_upload(
+            sc.USERVISITS, raw, ["visitDate", "sourceIP", "adRevenue"],
+            n_nodes=NODES)
+    return _cache["store_uv"]
+
+
+def hdfs_store_uv():
+    if "hdfs_uv" not in _cache:
+        _, raw = uservisits_raw()
+        _cache["hdfs_uv"] = up.hdfs_upload(sc.USERVISITS, raw, n_nodes=NODES)
+    return _cache["hdfs_uv"]
+
+
+def hadooppp_store_uv():
+    if "hpp_uv" not in _cache:
+        _, raw = uservisits_raw()
+        _cache["hpp_uv"] = up.hadooppp_upload(sc.USERVISITS, raw, "sourceIP",
+                                              n_nodes=NODES)
+    return _cache["hpp_uv"]
+
+
+def timed(fn, *args, warmup: int = 1, reps: int = 3, **kw):
+    """(median wall seconds, result) with jit warm-up."""
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(jax.tree.leaves(out)[0]) if jax.tree.leaves(out) else None
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        leaves = jax.tree.leaves(out)
+        if leaves:
+            jax.block_until_ready(leaves[0])
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), out
+
+
+def upload_model_seconds(stats: up.UploadStats, n_nodes: int = NODES,
+                         disk_bw: float = 100e6, net_bw: float = 125e6,
+                         cores: int = 4, cpu_factor: float = 1.0) -> float:
+    """Modeled cluster upload wall time.
+
+    The paper's central claim (§2.3): sorting/indexing rides the I/O-bound
+    upload pipeline on otherwise-idle CPU ticks.  So per-node compute
+    OVERLAPS the disk/network stream: wall = client-net + max(disk, compute).
+    Nodes have ``cores`` cores (paper: quad-core Xeons); this box measures
+    the compute single-threaded, so per-node compute = wall_s/(nodes*cores).
+    Hadoop++'s post-hoc job cannot overlap its extra read+write — charged
+    sequentially, as in the paper."""
+    net_s = stats.ascii_bytes / net_bw            # client -> pipeline
+    disk_s = stats.written_bytes / (disk_bw * n_nodes)
+    compute_s = stats.wall_s / (n_nodes * cores * cpu_factor)
+    extra_s = stats.extra_read_bytes / (disk_bw * n_nodes)
+    return net_s + max(disk_s, compute_s) + extra_s
+
+
+# The paper's workloads ------------------------------------------------------
+
+BOB_QUERIES = {
+    # name: (filter col, lo, hi, projection) — selectivities mirror §6.2
+    "Bob-Q1": ("visitDate", 10000, 10155, ("sourceIP",)),            # 3.1e-2
+    "Bob-Q2": ("sourceIP", None, None, ("searchWord", "duration", "adRevenue")),  # point
+    "Bob-Q3": ("sourceIP", None, None, ("searchWord", "duration", "adRevenue")),  # point+post
+    "Bob-Q4": ("adRevenue", 1, 1700, ("searchWord", "duration", "adRevenue")),    # 1.7e-2
+    "Bob-Q5": ("adRevenue", 1, 20400, ("searchWord", "duration", "adRevenue")),   # 2.0e-1
+}
+
+SYN_QUERIES = {
+    "Syn-Q1a": ("attr0", 0, 104857, tuple(f"attr{i}" for i in range(19))),
+    "Syn-Q1b": ("attr0", 0, 104857, tuple(f"attr{i}" for i in range(9))),
+    "Syn-Q1c": ("attr0", 0, 104857, ("attr1",)),
+    "Syn-Q2a": ("attr0", 0, 10485, tuple(f"attr{i}" for i in range(19))),
+    "Syn-Q2b": ("attr0", 0, 10485, tuple(f"attr{i}" for i in range(9))),
+    "Syn-Q2c": ("attr0", 0, 10485, ("attr1",)),
+}
+
+
+def bob_query(name: str):
+    from repro.core.query import HailQuery
+    col, lo, hi, proj = BOB_QUERIES[name]
+    if lo is None:  # point query on an existing sourceIP
+        cols, _ = uservisits_raw()
+        v = int(cols["sourceIP"][12345])
+        lo = hi = v
+    return HailQuery(filter=(col, lo, hi), projection=proj)

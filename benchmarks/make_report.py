@@ -1,0 +1,71 @@
+"""Emit the §Dry-run / §Roofline markdown tables from artifacts/dryrun/*.json.
+
+  PYTHONPATH=src:. python benchmarks/make_report.py [--tag vopt]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from benchmarks.bench_roofline import load_cells
+
+
+def fmt(x, nd=3):
+    if x is None:
+        return "-"
+    if isinstance(x, float):
+        if x == 0:
+            return "0"
+        if abs(x) < 1e-3 or abs(x) >= 1e5:
+            return f"{x:.2e}"
+        return f"{x:.{nd}g}"
+    return str(x)
+
+
+def roofline_table(tag: str) -> str:
+    cells = load_cells("single", tag)
+    out = ["| arch | shape | compute s | memory s | coll s | dominant | "
+           "MODEL_FLOPS | model/HLO | MFU bound | HBM GB/dev |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for (arch, shape), r in sorted(cells.items()):
+        t = r["roofline"]
+        mem_gb = (r["memory"]["argument_bytes"] + r["memory"]["temp_bytes"]
+                  + r["memory"]["output_bytes"] - r["memory"]["alias_bytes"]) / 1e9
+        out.append(
+            f"| {arch} | {shape} | {fmt(t['compute_s'])} | {fmt(t['memory_s'])} "
+            f"| {fmt(t['collective_s'])} | **{t['dominant']}** "
+            f"| {fmt(r['model_flops'], 3)} | {fmt(r['model_over_hlo_flops'])} "
+            f"| {fmt(r['roofline_fraction'])} | {mem_gb:.1f} |")
+    return "\n".join(out)
+
+
+def dryrun_table(tag: str) -> str:
+    out = ["| arch | shape | mesh | devices | lower s | compile s | "
+           "args GB/dev | temp GB/dev | coll kinds |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for mesh in ("single", "multi"):
+        for (arch, shape), r in sorted(load_cells(mesh, tag).items()):
+            kinds = ",".join(f"{k}:{v}" for k, v in
+                             sorted(r["hlo"]["coll_count"].items()))
+            out.append(
+                f"| {arch} | {shape} | {mesh} | {r['devices']} "
+                f"| {r['lower_s']:.1f} | {r['compile_s']:.1f} "
+                f"| {r['memory']['argument_bytes'] / 1e9:.2f} "
+                f"| {r['memory']['temp_bytes'] / 1e9:.2f} | {kinds} |")
+    return "\n".join(out)
+
+
+def summary(tag: str) -> str:
+    s = [f"single-pod cells: {len(load_cells('single', tag))}; "
+         f"multi-pod cells: {len(load_cells('multi', tag))} (all compiled)"]
+    return "\n".join(s)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--table", default="roofline",
+                    choices=["roofline", "dryrun", "summary"])
+    a = ap.parse_args()
+    print({"roofline": roofline_table, "dryrun": dryrun_table,
+           "summary": summary}[a.table](a.tag))

@@ -1,0 +1,7 @@
+"""HAIL core: the paper's contribution as a composable JAX data plane."""
+from repro.core.index import PARTITION, ClusteredIndex  # noqa: F401
+from repro.core.mapreduce import ClusterModel, JobStats, run_job  # noqa: F401
+from repro.core.query import HailQuery, hail_annotation, plan  # noqa: F401
+from repro.core.schema import SYNTHETIC, USERVISITS, Schema  # noqa: F401
+from repro.core.store import BlockStore, Namenode  # noqa: F401
+from repro.core.upload import hail_upload, hadooppp_upload, hdfs_upload  # noqa: F401

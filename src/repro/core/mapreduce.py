@@ -1,0 +1,175 @@
+"""MapReduce engines over the HAIL block store.
+
+Two executors:
+
+* ``run_job`` — split-driven executor (the Hadoop-pipeline analogue): one
+  jit dispatch per split (HailSplitting batches many blocks per dispatch);
+  per-task overheads accounted explicitly (measured dispatch + configurable
+  simulated scheduler constant, the paper's multi-second Hadoop overhead).
+  Node-failure injection re-schedules a failed node's splits onto surviving
+  replicas, falling back to full scan when the lost replica held the only
+  matching index (paper Fig 8).
+
+* ``spmd_aggregate`` — shard_map engine for cluster-wide aggregations:
+  map+combine per device over the block-sharded store, hash-bucket shuffle
+  via all_to_all, segment-sum reduce.  Degenerates gracefully on 1 device;
+  lowerable on the 512-device production mesh (see tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import query as q
+from repro.core.splitting import Split, hadoop_splits, hail_splits
+from repro.core.store import BlockStore
+
+
+@dataclasses.dataclass
+class JobStats:
+    n_tasks: int
+    map_compute_s: float
+    overhead_s: float          # dispatch + simulated scheduling
+    bytes_read: int
+    end_to_end_s: float        # compute + overhead (simulated cluster walltime)
+    record_reader_s: float
+    results: dict
+    rescheduled_tasks: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterModel:
+    """Simulated-cluster constants (documented in EXPERIMENTS.md)."""
+    sched_overhead_s: float = 3.0      # Hadoop per-task scheduling (paper §6.4)
+    hail_sched_overhead_s: float = 3.0 # same scheduler; fewer tasks is the win
+    disk_bw: float = 100e6             # B/s (paper's 100MB/s disk)
+    n_nodes: int = 10
+    map_slots: int = 4
+
+
+def run_job(store: BlockStore, query: q.HailQuery, *,
+            splitting: str = "hail", cluster: ClusterModel = ClusterModel(),
+            reduce_fn: Optional[Callable] = None,
+            fail_node_at: Optional[float] = None) -> JobStats:
+    """Execute filter/project (+optional reduce) over all blocks."""
+    qplan = q.plan(store, query)
+    if store.layout != "pax":
+        splits = hadoop_splits(store, qplan)
+    elif splitting == "hail":
+        splits = hail_splits(store, qplan, cluster.map_slots)
+    else:
+        splits = hadoop_splits(store, qplan)
+
+    n_tasks = len(splits)
+    fail_after = (int(len(splits) * fail_node_at)
+                  if fail_node_at is not None else None)
+    failed_node = None
+    rescheduled = 0
+
+    compute_s = 0.0
+    bytes_read = 0
+    masks, cols = [], []
+    i = 0
+    pending = list(splits)
+    while i < len(pending):
+        if fail_after is not None and i == fail_after and failed_node is None:
+            # kill the node that would serve the next split; re-plan the
+            # not-yet-executed splits it owned onto surviving replicas
+            failed_node = pending[i].node
+            store.namenode.kill_node(failed_node)
+            qplan = q.plan(store, query)
+            survivors = [s for s in pending[i:] if s.node != failed_node]
+            lost_blocks = [b for s in pending[i:] if s.node == failed_node
+                           for b in s.block_ids]
+            retries = [Split(node=int(qplan.nodes[b]), block_ids=(b,),
+                             index_scan=bool(qplan.index_scan[b]))
+                       for b in lost_blocks]
+            rescheduled = len(retries)
+            pending = pending[:i] + survivors + retries
+            if i >= len(pending):
+                break
+        sp = pending[i]
+        i += 1
+        t0 = time.perf_counter()
+        if store.layout == "pax":
+            res = q.read_hail(store, query, qplan, list(sp.block_ids))
+        else:
+            res = q.read_hadoop(store, query, list(sp.block_ids))
+        jax.block_until_ready(res.mask)
+        compute_s += time.perf_counter() - t0
+        bytes_read += res.bytes_read
+        masks.append(np.asarray(res.mask))
+        cols.append({c: np.asarray(v) for c, v in res.cols.items()})
+
+    n_tasks = len(pending)
+    overhead = n_tasks * (cluster.hail_sched_overhead_s
+                          if splitting == "hail" and store.layout == "pax"
+                          else cluster.sched_overhead_s)
+    if failed_node is not None:
+        store.namenode.revive(failed_node)
+
+    mask = np.concatenate(masks, axis=0)
+    out = {c: np.concatenate([d[c] for d in cols], axis=0)
+           for c in cols[0]} if cols else {}
+    results = {"n_rows": int(mask.sum()),
+               "sample": {c: v.reshape(-1)[mask.reshape(-1)][:8]
+                          for c, v in out.items()}}
+    if reduce_fn is not None:
+        results["reduce"] = reduce_fn(out, mask)
+
+    # simulated end-to-end: scheduling overhead amortized over the cluster's
+    # parallel task slots, measured map compute spread over the nodes (this
+    # box executes serially what the cluster runs n_nodes-wide), and modeled
+    # disk time for the bytes actually read (index scans read less).
+    disk_s = bytes_read / (cluster.disk_bw * cluster.n_nodes)
+    e2e = (overhead / (cluster.n_nodes * cluster.map_slots)
+           + compute_s / cluster.n_nodes + disk_s)
+    return JobStats(n_tasks=n_tasks, map_compute_s=compute_s,
+                    overhead_s=overhead, bytes_read=bytes_read,
+                    end_to_end_s=e2e,
+                    record_reader_s=compute_s / cluster.n_nodes + disk_s,
+                    results=results, rescheduled_tasks=rescheduled)
+
+
+# ---------------------------------------------------------------------------
+# SPMD aggregation engine (shard_map): map -> all_to_all shuffle -> reduce
+# ---------------------------------------------------------------------------
+
+
+def spmd_aggregate(mesh, key_col: jax.Array, val_col: jax.Array,
+                   mask: jax.Array, n_buckets: int, axis: str = "data"):
+    """GROUP-BY-sum: (blocks, rows) keys/values/mask sharded on `axis` ->
+    (n_buckets,) sums + counts.  n_buckets must divide by mesh[axis]."""
+    from jax.sharding import PartitionSpec as P
+    from jax import shard_map
+
+    n_dev = mesh.shape[axis]
+    assert n_buckets % n_dev == 0
+    per_dev = n_buckets // n_dev
+
+    def local(keys, vals, msk):
+        k = (keys % n_buckets).astype(jnp.int32).reshape(-1)
+        v = jnp.where(msk.reshape(-1), vals.reshape(-1).astype(jnp.float32), 0.0)
+        c = msk.reshape(-1).astype(jnp.float32)
+        # local combine: per-bucket partial sums (the MR "combiner")
+        sums = jax.ops.segment_sum(v, k, num_segments=n_buckets)
+        cnts = jax.ops.segment_sum(c, k, num_segments=n_buckets)
+        # shuffle: bucket b belongs to device b // per_dev; all_to_all sends
+        # chunk j of every mapper's partials to reducer j
+        sums = sums.reshape(n_dev, per_dev)
+        cnts = cnts.reshape(n_dev, per_dev)
+        sums = jax.lax.all_to_all(sums, axis, 0, 0)    # (n_dev, per_dev)
+        cnts = jax.lax.all_to_all(cnts, axis, 0, 0)
+        # reduce: sum partials from every mapper
+        return sums.sum(0), cnts.sum(0)
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P(axis), P(axis), P(axis)),
+                   out_specs=(P(axis), P(axis)))
+    sums, cnts = fn(key_col, val_col, mask)
+    return sums.reshape(-1), cnts.reshape(-1)

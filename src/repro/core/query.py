@@ -1,0 +1,273 @@
+"""HAIL query pipeline (paper §4): annotations, replica planning, record
+readers (index scan vs full scan), PAX->row reconstruction.
+
+Replica selection mirrors §4.3: for each block, prefer an *alive* replica
+whose clustered index matches the filter attribute; otherwise fall back to
+any alive replica with a full scan (failover path — Fig 8's experiment).
+
+Record readers are jit'd, *batched over many blocks per call* — that batching
+is exactly what HailSplitting enables (one dispatch per split instead of one
+per block); the benchmarks measure both policies.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import re
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import index as idx
+from repro.core import parse as ps
+from repro.core.schema import ROWID, Schema
+from repro.core.store import BlockStore
+
+
+@dataclasses.dataclass(frozen=True)
+class HailQuery:
+    """filter: (column, lo, hi) inclusive range (point = lo==hi)."""
+    filter: Optional[tuple[str, int, int]]
+    projection: tuple[str, ...]
+
+    @property
+    def filter_col(self) -> Optional[str]:
+        return self.filter[0] if self.filter else None
+
+
+def hail_annotation(schema: Schema, filter: str = "", projection: str = ""):
+    """Parse the paper's @HailQuery annotation syntax:
+
+      @HailQuery(filter="@3 between(7305,7670)", projection={@1})
+      filter forms: "@k between(a,b)" | "@k = v"   (@k is 1-based position)
+    """
+    flt = None
+    if filter:
+        m = re.match(r"@(\d+)\s+between\((-?\d+),\s*(-?\d+)\)", filter.strip())
+        if m:
+            col = schema.columns[int(m.group(1)) - 1].name
+            flt = (col, int(m.group(2)), int(m.group(3)))
+        else:
+            m = re.match(r"@(\d+)\s*=\s*(-?\d+)", filter.strip())
+            if not m:
+                raise ValueError(f"bad filter annotation: {filter!r}")
+            col = schema.columns[int(m.group(1)) - 1].name
+            v = int(m.group(2))
+            flt = (col, v, v)
+    proj = tuple(schema.columns[int(p) - 1].name
+                 for p in re.findall(r"@(\d+)", projection))
+    return HailQuery(filter=flt, projection=proj or schema.names)
+
+
+def hail_query(filter: str = "", projection: str = "", schema: Schema = None):
+    """Decorator flavour: @hail_query(filter=..., projection=...) on a map fn."""
+    def deco(fn):
+        fn.__hail_query__ = hail_annotation(schema, filter, projection)
+        return fn
+    return deco
+
+
+# ---------------------------------------------------------------------------
+# Planning (the JobClient/JobTracker side)
+# ---------------------------------------------------------------------------
+
+FULL_SCAN = -1
+
+
+@dataclasses.dataclass
+class QueryPlan:
+    replica_for_block: np.ndarray    # (n_blocks,) replica idx used for reading
+    index_scan: np.ndarray           # (n_blocks,) bool: index scan possible
+    nodes: np.ndarray                # (n_blocks,) datanode serving the read
+
+
+def plan(store: BlockStore, query: HailQuery) -> QueryPlan:
+    nb = store.n_blocks
+    rep = np.zeros(nb, dtype=np.int64)
+    is_idx = np.zeros(nb, dtype=bool)
+    nodes = np.zeros(nb, dtype=np.int64)
+    want = query.filter_col
+    for b in range(nb):
+        alive = store.alive_replica_ids(b)
+        if not alive:
+            raise RuntimeError(f"block {b}: all replicas lost")
+        choice = None
+        if want is not None and store.layout == "pax":
+            for i in alive:
+                if store.replicas[i].sort_key == want:
+                    choice = i
+                    is_idx[b] = True
+                    break
+        if choice is None:
+            choice = alive[0]
+        rep[b] = choice
+        nodes[b] = int(store.replicas[choice].nodes[b])
+    return QueryPlan(replica_for_block=rep, index_scan=is_idx, nodes=nodes)
+
+
+# ---------------------------------------------------------------------------
+# Record readers (jit'd, batched over blocks)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("partition_size", "lo", "hi"))
+def _index_read(sorted_key, mins, bad, *, partition_size: int, lo: int, hi: int):
+    f = jax.vmap(lambda k, m, b: idx.index_scan_mask(k, m, lo, hi,
+                                                     partition_size) & ~b)
+    mask = f(sorted_key, mins, bad)
+    g = jax.vmap(lambda m: idx.rows_read_fraction(m, lo, hi, partition_size,
+                                                  sorted_key.shape[1]))
+    return mask, g(mins)
+
+
+@functools.partial(jax.jit, static_argnames=("lo", "hi"))
+def _full_read(key_col, bad, *, lo: int, hi: int):
+    return jax.vmap(lambda k, b: idx.full_scan_mask(k, lo, hi) & ~b)(key_col, bad)
+
+
+@dataclasses.dataclass
+class ReadResult:
+    """Fixed-shape result: projected columns + qualifying mask."""
+    cols: dict[str, jax.Array]     # col -> (n_blocks, rows)
+    mask: jax.Array                # (n_blocks, rows) bool
+    rows_read_frac: jax.Array      # (n_blocks,) I/O model input
+    bytes_read: int                # modeled bytes (index scan reads less)
+
+
+def _bad_mask(store: BlockStore, replica: int) -> jax.Array:
+    """Bad rows sit at the tail of indexed replicas (sorted there); for an
+    unindexed PAX replica they stay at their original upload positions."""
+    if store.replicas[replica].sort_key is None:
+        if store.bad_original is not None:
+            return store.bad_original
+        return jnp.zeros((store.n_blocks, store.rows_per_block), bool)
+    r = jnp.arange(store.rows_per_block, dtype=jnp.int32)[None, :]
+    return r >= (store.rows_per_block - store.bad_counts[:, None])
+
+
+def read_hail(store: BlockStore, query: HailQuery, qplan: QueryPlan,
+              block_ids: Sequence[int] | None = None) -> ReadResult:
+    """HAIL record reader over (a subset of) blocks, per-replica batched."""
+    nb = store.n_blocks
+    ids = np.arange(nb) if block_ids is None else np.asarray(block_ids)
+    rows = store.rows_per_block
+    mask = jnp.zeros((len(ids), rows), bool)
+    frac = jnp.ones((len(ids),), jnp.float32)
+    out_cols = {c: jnp.zeros((len(ids), rows), store.replicas[0].cols[c].dtype)
+                for c in query.projection + (ROWID,)}
+    col_bytes = 4 * rows
+    bytes_read = 0
+    for rid in np.unique(qplan.replica_for_block[ids]):
+        sel = np.nonzero(qplan.replica_for_block[ids] == rid)[0]
+        bsel = ids[sel]
+        rep = store.replicas[int(rid)]
+        bad = _bad_mask(store, int(rid))[bsel]
+        use_index = bool(qplan.index_scan[bsel].all()) and query.filter is not None
+        if query.filter is not None:
+            col, lo, hi = query.filter
+            if use_index:
+                m, fr = _index_read(rep.cols[col][bsel], rep.mins[bsel], bad,
+                                    partition_size=store.partition_size,
+                                    lo=lo, hi=hi)
+                frac = frac.at[sel].set(fr.astype(jnp.float32))
+            else:
+                m = _full_read(rep.cols[col][bsel], bad, lo=lo, hi=hi)
+                fr = jnp.ones((len(bsel),))
+            mask = mask.at[sel].set(m)
+        else:
+            m = ~bad
+            fr = jnp.ones((len(bsel),))
+            mask = mask.at[sel].set(m)
+        # modeled I/O: filter column read per partition range; projected
+        # columns read for qualifying partitions only (PAX pruning)
+        bytes_read += int(np.asarray(fr).sum() * col_bytes
+                          * (1 + len(query.projection)))
+        for c in query.projection + (ROWID,):
+            out_cols[c] = out_cols[c].at[sel].set(rep.cols[c][bsel])
+    return ReadResult(cols=out_cols, mask=mask, rows_read_frac=frac,
+                      bytes_read=bytes_read)
+
+
+def read_hail_kernels(store: BlockStore, query: HailQuery, qplan: QueryPlan,
+                      block_ids: Sequence[int] | None = None) -> ReadResult:
+    """Kernel-backed record reader: index_search + pax_scan Pallas kernels
+    (interpret mode on CPU).  Semantics identical to read_hail — asserted by
+    tests/test_kernels.py::test_record_reader_kernel_equivalence."""
+    from repro.kernels import ops
+
+    assert query.filter is not None and store.layout == "pax"
+    col, lo, hi = query.filter
+    ids = (np.arange(store.n_blocks) if block_ids is None
+           else np.asarray(block_ids))
+    rows = store.rows_per_block
+    rid0 = int(qplan.replica_for_block[ids[0]])
+    assert all(int(qplan.replica_for_block[b]) == rid0 for b in ids), \
+        "kernel reader expects a single-replica split"
+    rep = store.replicas[rid0]
+    use_index = bool(qplan.index_scan[ids].all())
+    proj_cols = tuple(query.projection) + (ROWID,)
+
+    keys = rep.cols[col][ids]
+    proj = jnp.stack([rep.cols[c][ids] for c in proj_cols], axis=-1)
+    bad = np.asarray(_bad_mask(store, rid0))[ids]
+
+    if use_index:
+        pr = np.asarray(ops.index_search(rep.mins[ids], lo, hi))
+    masks, outs, fracs = [], [], []
+    for i, b in enumerate(ids):
+        if use_index:
+            r0 = int(pr[i, 0]) * store.partition_size
+            r1 = min((int(pr[i, 1]) + 1) * store.partition_size, rows)
+        else:
+            r0, r1 = 0, rows
+        m, o, _ = ops.pax_scan(keys[i, r0:r1], proj[i, r0:r1], lo, hi)
+        full_m = jnp.zeros((rows,), bool).at[r0:r1].set(m)
+        full_o = jnp.zeros((rows, len(proj_cols)), proj.dtype).at[r0:r1].set(o)
+        masks.append(full_m & ~bad[i])
+        outs.append(full_o)
+        fracs.append((r1 - r0) / rows)
+    mask = jnp.stack(masks)
+    out = jnp.stack(outs)
+    cols = {c: out[..., j] for j, c in enumerate(proj_cols)}
+    col_bytes = 4 * rows
+    return ReadResult(cols=cols, mask=mask,
+                      rows_read_frac=jnp.asarray(fracs, jnp.float32),
+                      bytes_read=int(sum(fracs) * col_bytes
+                                     * (1 + len(query.projection))))
+
+
+def read_hadoop(store: BlockStore, query: HailQuery,
+                block_ids: Sequence[int] | None = None) -> ReadResult:
+    """Hadoop baseline: parse raw ASCII rows, then scan (row layout)."""
+    assert store.layout == "row_ascii"
+    ids = (np.arange(store.n_blocks) if block_ids is None
+           else np.asarray(block_ids))
+    raw = store.replicas[0].cols["__raw__"][ids]
+
+    @jax.jit
+    def go(raw, bids):
+        def one(block, bid):
+            cols, bad = ps.parse_block(store.schema, block)
+            cols[ROWID] = (bid * block.shape[0]
+                           + jnp.arange(block.shape[0], dtype=jnp.int32))
+            if query.filter is not None:
+                col, lo, hi = query.filter
+                m = idx.full_scan_mask(cols[col], lo, hi) & ~bad
+            else:
+                m = ~bad
+            return {c: cols[c] for c in query.projection + (ROWID,)}, m
+
+        return jax.vmap(one)(raw, bids)
+
+    cols, mask = go(raw, jnp.asarray(ids, jnp.int32))
+    return ReadResult(cols=cols, mask=mask,
+                      rows_read_frac=jnp.ones((len(ids),)),
+                      bytes_read=int(raw.size))
+
+
+def collect(result: ReadResult) -> dict[str, np.ndarray]:
+    """Materialize qualifying rows (host side, for tests/examples)."""
+    m = np.asarray(result.mask).reshape(-1)
+    return {c: np.asarray(v).reshape(-1)[m] for c, v in result.cols.items()}

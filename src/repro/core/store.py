@@ -1,0 +1,127 @@
+"""Replicated PAX block store + namenode metadata (paper §3.2-§3.3).
+
+``BlockStore`` holds R physically different replicas of every logical block:
+replica r is sorted by its own key with a sparse clustered index and its own
+checksums (sort order differs => checksums differ, exactly as in the paper).
+An implicit ``__rowid__`` column preserves logical row identity, so *any*
+replica reconstructs the logical block (failover invariant).
+
+``Namenode`` is the central directory: ``dir_block`` (blockID -> datanodes)
+plus HAIL's addition ``dir_rep`` ((blockID, node) -> HAILBlockReplicaInfo)
+used by the scheduler to route map tasks to matching indexes (§3.3, §4.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.schema import ROWID, Schema
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaInfo:
+    """HAILBlockReplicaInfo: what the namenode knows about one replica."""
+    block_id: int
+    node: int
+    sort_key: Optional[str]        # clustered-index key (None = unindexed)
+    partition_size: int
+    n_rows: int
+    layout: str                    # 'pax' | 'row_ascii'
+    nbytes: int
+
+
+class Namenode:
+    """Central metadata service (Dir_block + Dir_rep + liveness)."""
+
+    def __init__(self):
+        self.dir_block: dict[int, list[int]] = {}
+        self.dir_rep: dict[tuple[int, int], ReplicaInfo] = {}
+        self.dead: set[int] = set()
+
+    def register(self, info: ReplicaInfo):
+        self.dir_block.setdefault(info.block_id, []).append(info.node)
+        self.dir_rep[(info.block_id, info.node)] = info
+
+    def locate(self, block_id: int) -> list[int]:
+        return [n for n in self.dir_block[block_id] if n not in self.dead]
+
+    def replicas(self, block_id: int) -> list[ReplicaInfo]:
+        return [self.dir_rep[(block_id, n)] for n in self.locate(block_id)]
+
+    def get_hosts_with_index(self, block_id: int, key: str) -> list[int]:
+        """The paper's new BlockLocation.getHostsWithIndex()."""
+        return [r.node for r in self.replicas(block_id) if r.sort_key == key]
+
+    def kill_node(self, node: int):
+        self.dead.add(node)
+
+    def revive(self, node: int | None = None):
+        if node is None:
+            self.dead.clear()
+        else:
+            self.dead.discard(node)
+
+
+@dataclasses.dataclass
+class Replica:
+    """One sort order of the whole dataset: per-column (n_blocks, rows)."""
+    sort_key: Optional[str]
+    cols: dict[str, jax.Array]
+    mins: Optional[jax.Array]              # (n_blocks, n_partitions)
+    checksums: dict[str, jax.Array]        # col -> (n_blocks, n_chunks) u32
+    nodes: np.ndarray                      # (n_blocks,) datanode per block
+
+    @property
+    def nbytes(self) -> int:
+        return int(sum(v.size * v.dtype.itemsize for v in self.cols.values()))
+
+
+@dataclasses.dataclass
+class BlockStore:
+    schema: Schema
+    n_blocks: int
+    rows_per_block: int
+    partition_size: int
+    replicas: list[Replica]
+    bad_counts: jax.Array                  # (n_blocks,) bad records per block
+    namenode: Namenode
+    layout: str = "pax"
+    bad_original: Optional[jax.Array] = None  # (n_blocks, rows) upload order
+
+    @property
+    def replication(self) -> int:
+        return len(self.replicas)
+
+    def replica_by_key(self, key: str) -> Optional[int]:
+        for i, r in enumerate(self.replicas):
+            if r.sort_key == key:
+                return i
+        return None
+
+    def alive_replica_ids(self, block_id: int) -> list[int]:
+        """Replica indices whose datanode for this block is alive."""
+        out = []
+        for i, r in enumerate(self.replicas):
+            if int(r.nodes[block_id]) not in self.namenode.dead:
+                out.append(i)
+        return out
+
+    @property
+    def nbytes(self) -> int:
+        return sum(r.nbytes for r in self.replicas)
+
+
+def assign_nodes(n_blocks: int, replication: int, n_nodes: int) -> np.ndarray:
+    """(replication, n_blocks) datanode placement: replicas of a block land
+    on distinct nodes (HDFS invariant), blocks round-robin."""
+    assert replication <= n_nodes, "replication must be <= cluster size"
+    out = np.zeros((replication, n_blocks), dtype=np.int64)
+    for b in range(n_blocks):
+        base = b % n_nodes
+        for r in range(replication):
+            out[r, b] = (base + r) % n_nodes
+    return out

@@ -1,0 +1,71 @@
+"""Bitonic sort-by-key Pallas kernel — the upload pipeline's per-replica sort.
+
+TPU adaptation of the paper's in-RAM block sort (§3.5): the whole key column
+of one HDFS block (power-of-two rows, <=64k) plus a row-index vector sit in
+VMEM; the bitonic network runs entirely on the VPU using reshape/reverse/
+select compare-exchanges (a ``pos ^ j`` partner exchange for power-of-two j
+is exactly a reversal over a (n/2j, 2, j) view — no gathers needed).  The
+emitted permutation then reorders every PAX column with one gather per
+column (ops.sort_block).
+
+Grid: one program per block; BlockSpec keeps key+perm tiles resident across
+all O(log^2 n) stages.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _compare_exchange(keys, perm, j: int, k: int):
+    """One bitonic stage: partner = pos ^ j, ascending iff (pos & k) == 0."""
+    n = keys.shape[0]
+    a_k = keys.reshape(n // (2 * j), 2, j)
+    a_p = perm.reshape(n // (2 * j), 2, j)
+    lo_k, hi_k = a_k[:, 0, :], a_k[:, 1, :]
+    lo_p, hi_p = a_p[:, 0, :], a_p[:, 1, :]
+    # ascending iff (group_base & k) == 0; constant within each 2j group
+    base = jax.lax.broadcasted_iota(jnp.int32, (n // (2 * j), 1), 0) * (2 * j)
+    asc = (base & k) == 0
+    swap = jnp.where(asc, lo_k > hi_k, lo_k < hi_k)
+    new_lo_k = jnp.where(swap, hi_k, lo_k)
+    new_hi_k = jnp.where(swap, lo_k, hi_k)
+    new_lo_p = jnp.where(swap, hi_p, lo_p)
+    new_hi_p = jnp.where(swap, lo_p, hi_p)
+    keys = jnp.stack([new_lo_k, new_hi_k], axis=1).reshape(n)
+    perm = jnp.stack([new_lo_p, new_hi_p], axis=1).reshape(n)
+    return keys, perm
+
+
+def _bitonic_kernel(key_ref, out_key_ref, out_perm_ref, *, n: int):
+    keys = key_ref[0, :]
+    perm = jax.lax.broadcasted_iota(jnp.int32, (n,), 0)
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            keys, perm = _compare_exchange(keys, perm, j, k)
+            j //= 2
+        k *= 2
+    out_key_ref[0, :] = keys
+    out_perm_ref[0, :] = perm
+
+
+def bitonic_sort(keys: jax.Array, *, interpret: bool = True):
+    """keys (blocks, n) int32, n a power of two -> (sorted, perm)."""
+    blocks, n = keys.shape
+    assert n & (n - 1) == 0, f"rows must be a power of two, got {n}"
+    kernel = functools.partial(_bitonic_kernel, n=n)
+    return pl.pallas_call(
+        kernel,
+        grid=(blocks,),
+        in_specs=[pl.BlockSpec((1, n), lambda b: (b, 0))],
+        out_specs=[pl.BlockSpec((1, n), lambda b: (b, 0)),
+                   pl.BlockSpec((1, n), lambda b: (b, 0))],
+        out_shape=[jax.ShapeDtypeStruct((blocks, n), keys.dtype),
+                   jax.ShapeDtypeStruct((blocks, n), jnp.int32)],
+        interpret=interpret,
+    )(keys)

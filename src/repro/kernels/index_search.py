@@ -1,0 +1,43 @@
+"""Index-search Pallas kernel: the clustered index's root-directory lookup.
+
+For a batch of blocks, each with a VMEM-resident root of sorted partition
+minima, find [p_first, p_last] for a (lo, hi) range (paper Fig 2 steps 1+2).
+Roots are sorted, so searchsorted == popcount of (mins <= v) — one VPU
+reduction instead of a serial binary search (TPU adaptation: data-parallel
+counting beats branchy log-time search on a vector unit).
+
+Grid tiles the block axis; (lo, hi) are compile-time query constants (one
+tiny recompile per query, exactly like the jit'd record readers).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _search_kernel(mins_ref, out_ref, *, lo: int, hi: int):
+    mins = mins_ref[...]                                    # (TB, P)
+    first = jnp.maximum(jnp.sum(mins <= lo, axis=1).astype(jnp.int32) - 1, 0)
+    last = jnp.maximum(jnp.sum(mins <= hi, axis=1).astype(jnp.int32) - 1, 0)
+    out_ref[...] = jnp.stack([first, last], axis=1)
+
+
+def index_search(mins: jax.Array, lo: int, hi: int,
+                 *, block_tile: int = 8, interpret: bool = True) -> jax.Array:
+    """mins (blocks, n_parts) sorted rows -> (blocks, 2) int32."""
+    blocks, n_parts = mins.shape
+    tb = min(block_tile, blocks)
+    while blocks % tb:
+        tb -= 1
+    kernel = functools.partial(_search_kernel, lo=int(lo), hi=int(hi))
+    return pl.pallas_call(
+        kernel,
+        grid=(blocks // tb,),
+        in_specs=[pl.BlockSpec((tb, n_parts), lambda b: (b, 0))],
+        out_specs=pl.BlockSpec((tb, 2), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((blocks, 2), jnp.int32),
+        interpret=interpret,
+    )(mins)

@@ -1,0 +1,59 @@
+"""jit'd wrappers around the Pallas kernels (+ oracle fallbacks).
+
+On this CPU container kernels run in interpret mode (correctness); on TPU
+set interpret=False.  ``use_kernels(False)`` routes everything to the
+pure-jnp oracles in ref.py.  The kernel-backed record reader
+(core.query.read_hail_kernels) calls through these wrappers and is asserted
+equivalent to the jnp reader by the system test suite, so kernel/oracle
+agreement is exercised end-to-end, not only by per-kernel allclose tests.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.block_sort import bitonic_sort
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.index_search import index_search as _index_search
+from repro.kernels.pax_scan import pax_scan as _pax_scan
+
+_USE_KERNELS = True
+_INTERPRET = True   # CPU container: interpret mode; False on real TPUs
+
+
+def use_kernels(on: bool):
+    global _USE_KERNELS
+    _USE_KERNELS = on
+
+
+def sort_block(keys: jax.Array, cols: dict[str, jax.Array]):
+    """Sort one block by key, permuting all PAX columns.
+    keys (blocks, n) -> (sorted_keys, permuted cols)."""
+    if _USE_KERNELS and keys.shape[-1] & (keys.shape[-1] - 1) == 0:
+        sorted_keys, perm = bitonic_sort(keys, interpret=_INTERPRET)
+    else:
+        sorted_keys, perm = jax.vmap(ref.sort_by_key)(keys)
+    out = {c: jnp.take_along_axis(v, perm, axis=1) for c, v in cols.items()}
+    return sorted_keys, out, perm
+
+
+def index_search(mins: jax.Array, lo: int, hi: int) -> jax.Array:
+    if _USE_KERNELS:
+        return _index_search(mins, lo, hi, interpret=_INTERPRET)
+    return ref.index_search(mins, lo, hi)
+
+
+def pax_scan(key_col: jax.Array, proj: jax.Array, lo: int, hi: int):
+    if _USE_KERNELS:
+        return _pax_scan(key_col, proj, lo, hi, interpret=_INTERPRET)
+    return ref.pax_scan(key_col, proj, lo, hi)
+
+
+def attention(q, k, v, *, causal=True, window=None):
+    if _USE_KERNELS:
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               interpret=_INTERPRET)
+    return ref.attention(q, k, v, causal=causal, window=window)

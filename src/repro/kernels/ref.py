@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def sort_by_key(keys: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """-> (sorted_keys, permutation). keys (n,) int32."""
+    perm = jnp.argsort(keys)
+    return keys[perm], perm.astype(jnp.int32)
+
+
+def index_search(mins: jax.Array, lo, hi) -> jax.Array:
+    """mins (blocks, n_parts) sorted -> (blocks, 2) [p_first, p_last]."""
+    first = jnp.maximum(
+        jnp.sum(mins <= lo, axis=-1).astype(jnp.int32) - 1, 0)
+    last = jnp.maximum(
+        jnp.sum(mins <= hi, axis=-1).astype(jnp.int32) - 1, 0)
+    return jnp.stack([first, last], axis=-1)
+
+
+def pax_scan(key_col: jax.Array, proj: jax.Array, lo, hi):
+    """key_col (rows,), proj (rows, n_proj) -> (mask, masked_proj, count)."""
+    mask = (key_col >= lo) & (key_col <= hi)
+    out = jnp.where(mask[:, None], proj, 0)
+    return mask, out, mask.sum(dtype=jnp.int32)
+
+
+def selective_scan(delta, x, b, c, a):
+    """Naive mamba1 recurrence oracle.  delta,x (B,T,D); b,c (B,T,N);
+    a (D,N) negative. -> y (B,T,D), h_final (B,D,N)."""
+
+    def step(h, inp):
+        dt_t, x_t, b_t, c_t = inp              # (B,D) (B,D) (B,N) (B,N)
+        at = jnp.exp(dt_t[..., None] * a)      # (B,D,N)
+        bt = (dt_t * x_t)[..., None] * b_t[:, None, :]
+        h = at * h + bt
+        y = (h * c_t[:, None, :]).sum(-1)      # (B,D)
+        return h, y
+
+    bs, t, d = delta.shape
+    h0 = jnp.zeros((bs, d, a.shape[-1]), jnp.float32)
+    inp = (delta.swapaxes(0, 1), x.swapaxes(0, 1),
+           b.swapaxes(0, 1), c.swapaxes(0, 1))
+    h, ys = jax.lax.scan(step, h0, inp)
+    return ys.swapaxes(0, 1), h
+
+
+def attention(q, k, v, *, causal: bool = True, window: int | None = None):
+    """q (B,T,H,D), k/v (B,S,KV,D) -> (B,T,H,D). fp32 softmax oracle."""
+    b, t, h, d = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    rep = h // kvh
+    qg = q.reshape(b, t, kvh, rep, d).astype(jnp.float32)
+    sc = jnp.einsum("btgrk,bsgk->bgrts", qg, k.astype(jnp.float32))
+    sc = sc / math.sqrt(d)
+    qp = jnp.arange(t)[:, None]
+    kp = jnp.arange(s)[None, :]
+    m = jnp.ones((t, s), bool)
+    if causal:
+        m &= kp <= qp
+    if window is not None:
+        m &= kp > qp - window
+    sc = jnp.where(m, sc, -1e30)
+    w = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bgrts,bsgk->btgrk", w, v.astype(jnp.float32))
+    return out.reshape(b, t, h, d).astype(q.dtype)

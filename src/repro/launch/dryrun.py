@@ -1,0 +1,220 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first lines: jax locks the device count on first init.
+#   Only the dry-run sees 512 placeholder devices; tests/benches see 1 CPU.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and extract roofline inputs from the compiled artifact.
+
+  python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all                 # every cell, both meshes
+  python -m repro.launch.dryrun --all --mesh multi    # pod-axis proof only
+
+Artifacts: artifacts/dryrun/<arch>__<shape>__<mesh>[__tag].json (incremental;
+--force recomputes).  Failures are recorded as JSON with an "error" field —
+they are bugs in the sharding config and must be fixed, not skipped.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.dist import sharding as sh
+from repro.launch import hlo_analysis as ha
+from repro.launch.mesh import HW, make_production_mesh
+from repro.models.moe import capacity  # noqa: F401 (re-exported for tools)
+from repro.train.optimizer import OptCfg
+from repro.train.step import (StepCfg, batch_specs, cache_specs_for,
+                              make_decode_step, make_prefill_step,
+                              make_train_step, train_state_specs)
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "artifacts", "dryrun")
+
+
+def _float_params_to(dtype):
+    def f(s: sh.TensorSpec):
+        if jnp.issubdtype(s.dtype, jnp.floating):
+            return sh.TensorSpec(s.shape, s.axes, dtype, s.init, s.scale)
+        return s
+    return f
+
+
+def model_flops(cfg, shape) -> float:
+    """Global MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference), N = active."""
+    from repro.models.model import model_specs
+    specs = model_specs(cfg)
+    leaves = jax.tree.leaves(specs, is_leaf=sh.is_spec)
+    total = sum(s.size for s in leaves)
+    expert = sum(s.size for s in leaves if s.axes and s.axes[0] == "expert")
+    frac = 1.0
+    for lc in cfg.stack.pattern + cfg.stack.tail:
+        if lc.moe is not None:
+            frac = lc.moe.top_k / lc.moe.n_experts
+            break
+    active = total - expert + expert * frac
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * active * shape.global_batch * shape.seq_len
+    return 2.0 * active * shape.global_batch  # decode: one token / sequence
+
+
+def build_cell(arch: str, shape_name: str, mesh, rules, step_cfg: StepCfg):
+    """Returns (fn, example_args (ShapeDtypeStructs), out_shardings, donate)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    opt = OptCfg()
+    if shape.kind == "train":
+        fn = make_train_step(cfg, opt, step_cfg, mesh, rules)
+        st = train_state_specs(cfg, opt)
+        args = (sh.shape_structs(st, mesh, rules),
+                sh.shape_structs(batch_specs(cfg, shape), mesh, rules))
+        outs = (sh.shardings(st, mesh, rules), None)
+        return fn, args, outs, (0,)
+    # serving params in bf16
+    from repro.models.model import model_specs
+    pspecs = sh.map_specs(_float_params_to(jnp.bfloat16), model_specs(cfg))
+    if shape.kind == "prefill":
+        fn = make_prefill_step(cfg, step_cfg, mesh, rules)
+        args = (sh.shape_structs(pspecs, mesh, rules),
+                sh.shape_structs(batch_specs(cfg, shape), mesh, rules))
+        return fn, args, None, ()
+    fn = make_decode_step(cfg, step_cfg, mesh, rules)
+    cspecs = cache_specs_for(cfg, shape)
+    args = (sh.shape_structs(pspecs, mesh, rules),
+            sh.shape_structs(cspecs, mesh, rules),
+            sh.shape_structs(batch_specs(cfg, shape), mesh, rules))
+    outs = (None, sh.shardings(cspecs, mesh, rules))
+    return fn, args, outs, (1,)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             step_cfg: StepCfg = None, rules=None, tag: str = "",
+             save_hlo: bool = False, out_dir: str = ART_DIR) -> dict:
+    step_cfg = step_cfg or StepCfg()
+    rules = rules or sh.DEFAULT_RULES
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.devices.size
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "devices": int(n_dev), "tag": tag,
+           "step_cfg": {"remat": step_cfg.remat, "loss": step_cfg.loss}}
+    t0 = time.time()
+    try:
+        fn, args, outs, donate = build_cell(arch, shape_name, mesh, rules, step_cfg)
+        with mesh:
+            jitted = jax.jit(fn, out_shardings=outs, donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            rec["lower_s"] = time.time() - t0
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = time.time() - t1
+            mem = compiled.memory_analysis()
+            print(mem)
+            ca = dict(compiled.cost_analysis())
+            print({k: ca[k] for k in ("flops", "bytes accessed")
+                   if k in ca})
+            rec["memory"] = {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "generated_code_bytes": mem.generated_code_size_in_bytes,
+            }
+            rec["xla_cost"] = {"flops": ca.get("flops"),
+                               "bytes_accessed": ca.get("bytes accessed")}
+            txt = compiled.as_text()
+            rec["hlo_chars"] = len(txt)
+            costs = ha.analyze_hlo_text(txt)
+            rec["hlo"] = costs
+            rec["roofline"] = ha.roofline_terms(costs, HW)
+            mf = model_flops(cfg, shape)
+            rec["model_flops"] = mf
+            hw_total = costs["flops"] * n_dev
+            rec["model_over_hlo_flops"] = mf / hw_total if hw_total else None
+            rec["roofline_fraction"] = (
+                (mf / n_dev / HW["peak_bf16_flops"])
+                / rec["roofline"]["step_lower_bound_s"]
+                if rec["roofline"]["step_lower_bound_s"] > 0 else None)
+            if save_hlo:
+                os.makedirs(out_dir, exist_ok=True)
+                with open(os.path.join(
+                        out_dir, _name(arch, shape_name, mesh_kind, tag) + ".hlo"),
+                        "w") as f:
+                    f.write(txt)
+    except Exception as e:  # noqa: BLE001 - record and surface
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"FAILED {arch} {shape_name} {mesh_kind}: {rec['error']}")
+    rec["total_s"] = time.time() - t0
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, _name(arch, shape_name, mesh_kind, tag) + ".json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    status = "ERROR" if "error" in rec else "ok"
+    print(f"[{status}] {arch} {shape_name} {mesh_kind} tag={tag!r} "
+          f"({rec['total_s']:.1f}s) -> {path}", flush=True)
+    return rec
+
+
+def _name(arch, shape, mesh, tag):
+    n = f"{arch}__{shape}__{mesh}"
+    return n + (f"__{tag}" if tag else "")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--remat", default="full", choices=["none", "full", "dots"])
+    ap.add_argument("--loss", default="plain", choices=["plain", "chunked"])
+    ap.add_argument("--rules", default="baseline",
+                    choices=sorted(sh.RULE_PRESETS))
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--out", default=ART_DIR)
+    args = ap.parse_args()
+
+    step_cfg = StepCfg(remat=args.remat, loss=args.loss)
+    rules = sh.RULE_PRESETS[args.rules]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    if args.all:
+        todo = []
+        for arch in ARCHS:
+            cfg = get_config(arch)
+            for s in SHAPES:
+                if s in cfg.skip_shapes:
+                    continue
+                for m in meshes:
+                    todo.append((arch, s, m))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        todo = [(args.arch, args.shape, m) for m in meshes]
+
+    done = failed = 0
+    for arch, s, m in todo:
+        path = os.path.join(args.out, _name(arch, s, m, args.tag) + ".json")
+        if not args.force and os.path.exists(path):
+            with open(path) as f:
+                if "error" not in json.load(f):
+                    continue
+        rec = run_cell(arch, s, m, step_cfg=step_cfg, rules=rules,
+                       tag=args.tag, save_hlo=args.save_hlo, out_dir=args.out)
+        done += 1
+        failed += 1 if "error" in rec else 0
+    print(f"dry-run complete: {done} cells run, {failed} failures", flush=True)
+
+
+if __name__ == "__main__":
+    main()

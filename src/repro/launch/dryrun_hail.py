@@ -1,0 +1,64 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ first lines, same contract as dryrun.py
+
+"""HAIL data-plane dry-run: lower + compile the SPMD MapReduce engine and
+the upload pipeline on the production meshes (the block-store analogue of
+the model-cell dry-run).
+
+  PYTHONPATH=src python -m repro.launch.dryrun_hail
+"""
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import mapreduce as mr
+from repro.launch.mesh import make_production_mesh
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                   "artifacts", "dryrun")
+
+
+def run(multi_pod: bool):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    axes = mesh.axis_names
+    data_axis = "data"
+    rows, blocks = 65536, 4096          # 4096 blocks of 64k rows (PAX int32)
+    n_buckets = 4096
+
+    sh_blocks = NamedSharding(mesh, P(data_axis))
+    keys = jax.ShapeDtypeStruct((blocks, rows), jnp.int32, sharding=sh_blocks)
+    vals = jax.ShapeDtypeStruct((blocks, rows), jnp.int32, sharding=sh_blocks)
+    mask = jax.ShapeDtypeStruct((blocks, rows), jnp.bool_, sharding=sh_blocks)
+
+    def job(k, v, m):
+        return mr.spmd_aggregate(mesh, k, v, m, n_buckets, axis=data_axis)
+
+    with mesh:
+        t0 = time.time()
+        lowered = jax.jit(job).lower(keys, vals, mask)
+        compiled = lowered.compile()
+        dt = time.time() - t0
+        mem = compiled.memory_analysis()
+        print(mem)
+        txt = compiled.as_text()
+        n_a2a = txt.count(" all-to-all")
+        rec = {"kind": "hail_mapreduce", "multi_pod": multi_pod,
+               "devices": int(mesh.devices.size), "blocks": blocks,
+               "rows": rows, "compile_s": dt,
+               "temp_bytes": mem.temp_size_in_bytes,
+               "all_to_all_ops": n_a2a}
+    name = f"hail_mapreduce__{'multi' if multi_pod else 'single'}.json"
+    with open(os.path.join(ART, name), "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"[ok] HAIL MR dry-run {'multi' if multi_pod else 'single'}-pod: "
+          f"{mesh.devices.size} devices, compile {dt:.1f}s, "
+          f"{n_a2a} all-to-all ops (the shuffle)")
+
+
+if __name__ == "__main__":
+    run(False)
+    run(True)

@@ -1,0 +1,348 @@
+"""Trip-count-aware analysis of optimized (post-SPMD) HLO text.
+
+Why this exists: XLA's ``compiled.cost_analysis()`` visits a ``while`` body
+ONCE, so any model that ``lax.scan``s over layers under-reports FLOPs/bytes by
+~n_layers x (verified empirically on this container).  All our stacks scan.
+This module parses ``compiled.as_text()`` and walks the call graph,
+multiplying costs by loop trip counts (read from the ``known_trip_count``
+backend_config XLA attaches to compiled while ops).
+
+All shapes in a post-SPMD module are PER-DEVICE shard shapes, so every number
+reported here is per-device; roofline terms divide by per-chip peak rates.
+
+Outputs per module:
+  flops            - dot FLOPs (2*M*N*K) + 1/elem for elementwise arith
+  dot_flops        - MXU-only part
+  hbm_bytes        - fusion-boundary traffic: sum(out + operands) per
+                     top-level instruction (fusion internals excluded - they
+                     live in registers/VMEM, which is what makes this a much
+                     better HBM proxy than per-op accounting)
+  coll_bytes       - raw per-device payload per collective kind
+  coll_link_bytes  - ICI link-byte model: all-reduce 2(g-1)/g * S,
+                     all-gather/reduce-scatter/all-to-all (g-1)/g * S,
+                     collective-permute 1 * S, with S = max(out, operands)
+                     and g = collective group size.
+Validated against cost_analysis() on scan-free toys (tests/test_hlo_analysis).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "s4": 1, "u4": 1, "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+    "f8e8m0fnu": 1, "f4e2m1fn": 1,
+}
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "negate", "abs", "rsqrt", "sqrt", "compare", "select", "and", "or",
+    "xor", "not", "convert", "floor", "ceil", "sign", "cosine", "sine",
+    "clamp", "remainder", "atan2", "round-nearest-afz", "round-nearest-even",
+    "logistic", "cbrt", "erf", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic", "is-finite", "reduce", "reduce-window",
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "collective-broadcast", "ragged-all-to-all")
+
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "while", "conditional", "call", "after-all",
+               "add-dependency", "opt-barrier", "partition-id", "replica-id"}
+
+
+# ---------------------------------------------------------------------------
+# Shape parsing
+# ---------------------------------------------------------------------------
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_elems(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+def _first_shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+# ---------------------------------------------------------------------------
+# Instruction / computation parsing
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    out_type: str
+    operands: list[str]
+    attrs: str
+
+
+_COMP_START = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def _split_type_rest(rhs: str) -> tuple[str, str]:
+    """rhs = '<type> <opcode>(...), attrs' -> (type, remainder)."""
+    rhs = rhs.lstrip()
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return rhs[: i + 1], rhs[i + 1:].lstrip()
+        return rhs, ""
+    m = re.match(r"^([\w\[\],]+(?:\{[\d,]*\})?(?:\{[^}]*\})*)\s+(.*)$", rhs)
+    if m:
+        return m.group(1), m.group(2)
+    return "", rhs
+
+
+def parse_module(text: str) -> tuple[dict[str, list[Instr]], str]:
+    """Returns ({computation_name: [Instr]}, entry_name)."""
+    comps: dict[str, list[Instr]] = {}
+    entry = None
+    cur: list[Instr] | None = None
+    for raw in text.splitlines():
+        line = _COMMENT_RE.sub("", raw).rstrip()
+        if not line:
+            continue
+        if not line.startswith(" ") and line.endswith("{"):
+            m = _COMP_START.match(line)
+            if m:
+                name = m.group(2)
+                comps[name] = []
+                cur = comps[name]
+                if m.group(1):
+                    entry = name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR_RE.match(line)
+        if not mi:
+            continue
+        name, rhs = mi.group(1), mi.group(2)
+        out_type, rest = _split_type_rest(rhs)
+        mo = re.match(r"^([\w\-]+)\(", rest)
+        if not mo:
+            continue
+        opcode = mo.group(1)
+        # operands: names inside the first balanced paren group
+        depth = 0
+        args = ""
+        for i in range(len(opcode), len(rest)):
+            ch = rest[i]
+            if ch == "(":
+                depth += 1
+                if depth == 1:
+                    continue
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    attrs = rest[i + 1:]
+                    break
+            if depth >= 1:
+                args += ch
+        else:
+            attrs = ""
+        operands = re.findall(r"%([\w\.\-]+)", args)
+        cur.append(Instr(name, opcode, out_type, operands, attrs))
+    assert entry is not None, "no ENTRY computation found"
+    return comps, entry
+
+
+# ---------------------------------------------------------------------------
+# Cost walking
+# ---------------------------------------------------------------------------
+
+
+def _trip_count(attrs: str) -> int:
+    m = re.search(r'known_trip_count[^\d]*(\d+)', attrs)
+    return int(m.group(1)) if m else 1
+
+
+def _group_size(attrs: str) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", attrs)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def _called(attrs: str, key: str) -> str | None:
+    m = re.search(key + r"=%([\w\.\-]+)", attrs)
+    return m.group(1) if m else None
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+    coll_link_bytes: float = 0.0
+    coll_count: dict = dataclasses.field(default_factory=lambda: defaultdict(int))
+
+    def to_dict(self):
+        return {"flops": self.flops, "dot_flops": self.dot_flops,
+                "hbm_bytes": self.hbm_bytes,
+                "coll_bytes": dict(self.coll_bytes),
+                "coll_link_bytes": self.coll_link_bytes,
+                "coll_count": dict(self.coll_count)}
+
+
+def _dot_flops(instr: Instr, types: dict[str, str]) -> float:
+    out_elems = shape_elems(instr.out_type)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.attrs)
+    k = 1
+    if m and instr.operands:
+        lhs_type = types.get(instr.operands[0], "")
+        dims = _first_shape_dims(lhs_type)
+        if m.group(1):
+            for di in m.group(1).split(","):
+                di = int(di)
+                if di < len(dims):
+                    k *= dims[di]
+    return 2.0 * out_elems * k
+
+
+def walk(comps: dict[str, list[Instr]], comp_name: str, mult: float,
+         costs: Costs, count_bytes: bool = True) -> None:
+    instrs = comps.get(comp_name)
+    if instrs is None:
+        return
+    types = {i.name: i.out_type for i in instrs}
+    for ins in instrs:
+        op = ins.opcode
+        if op == "while":
+            trip = _trip_count(ins.attrs)
+            body = _called(ins.attrs, "body")
+            cond = _called(ins.attrs, "condition")
+            if body:
+                walk(comps, body, mult * trip, costs, count_bytes)
+            if cond:
+                walk(comps, cond, mult * trip, costs, count_bytes)
+            continue
+        if op == "conditional":
+            for key in ("true_computation", "false_computation"):
+                c = _called(ins.attrs, key)
+                if c:
+                    walk(comps, c, mult, costs, count_bytes)
+            for c in re.findall(r"branch_computations=\{([^}]*)\}", ins.attrs):
+                for name in re.findall(r"%([\w\.\-]+)", c):
+                    walk(comps, name, mult, costs, count_bytes)
+            continue
+        if op in ("call", "async-start"):
+            c = _called(ins.attrs, "to_apply") or _called(ins.attrs, "calls")
+            if c:
+                walk(comps, c, mult, costs, count_bytes)
+            continue
+        if op == "fusion":
+            c = _called(ins.attrs, "calls")
+            if c:
+                walk(comps, c, mult, costs, count_bytes=False)  # flops only
+            if count_bytes:
+                out_b = shape_bytes(ins.out_type)
+                opnd_b = sum(shape_bytes(types.get(o, "")) for o in ins.operands)
+                costs.hbm_bytes += mult * (out_b + opnd_b)
+            continue
+
+        base = op[:-6] if op.endswith("-start") else op
+        if op.endswith("-done"):
+            continue
+        if base in _COLLECTIVES:
+            opnd_b = sum(shape_bytes(types.get(o, "")) for o in ins.operands)
+            out_b = shape_bytes(ins.out_type)
+            payload = max(out_b, opnd_b)
+            g = _group_size(ins.attrs)
+            if base == "all-reduce":
+                link = 2.0 * payload * (g - 1) / max(g, 1)
+            elif base == "collective-permute":
+                link = float(payload)
+            else:
+                link = payload * (g - 1) / max(g, 1)
+            costs.coll_bytes[base] += mult * payload
+            costs.coll_link_bytes += mult * link
+            costs.coll_count[base] += int(mult)
+            if count_bytes:
+                costs.hbm_bytes += mult * (out_b + opnd_b)
+            continue
+
+        if op == "dot":
+            f = _dot_flops(ins, types)
+            costs.flops += mult * f
+            costs.dot_flops += mult * f
+        elif op == "convolution":
+            # approximation: 2 * out_elems * prod(kernel spatial dims * in_ch)
+            costs.flops += mult * 2.0 * shape_elems(ins.out_type) * 4
+        elif op in _ELEMENTWISE:
+            costs.flops += mult * shape_elems(ins.out_type)
+
+        if count_bytes and op not in _SKIP_BYTES:
+            out_b = shape_bytes(ins.out_type)
+            opnd_b = sum(shape_bytes(types.get(o, "")) for o in ins.operands)
+            costs.hbm_bytes += mult * (out_b + opnd_b)
+
+
+def analyze_hlo_text(text: str) -> dict:
+    comps, entry = parse_module(text)
+    costs = Costs()
+    walk(comps, entry, 1.0, costs)
+    return costs.to_dict()
+
+
+def roofline_terms(costs: dict, hw: dict) -> dict:
+    """Per-device seconds per term (HLO shapes are already per-shard)."""
+    compute_s = costs["flops"] / hw["peak_bf16_flops"]
+    memory_s = costs["hbm_bytes"] / hw["hbm_bw"]
+    coll_s = costs["coll_link_bytes"] / hw["ici_bw"]
+    dominant = max((("compute", compute_s), ("memory", memory_s),
+                    ("collective", coll_s)), key=lambda kv: kv[1])[0]
+    bound = max(compute_s, memory_s, coll_s)
+    return {"compute_s": compute_s, "memory_s": memory_s,
+            "collective_s": coll_s, "dominant": dominant,
+            "step_lower_bound_s": bound}

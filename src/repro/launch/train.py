@@ -1,0 +1,104 @@
+"""Production training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --reduced \
+      --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+On a real TPU slice this runs the full config on the production mesh; on
+this CPU container use --reduced (smoke-scale). Features exercised either
+way: sharded train step, HAIL-backed data selection (--hail-select), async
+checksummed checkpoints, resume-from-latest, elastic restore onto whatever
+mesh the process finds.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import checkpoint as ck
+from repro.configs import get_config, get_reduced
+from repro.dist import sharding as sh
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.train.optimizer import OptCfg
+from repro.train.step import (StepCfg, init_train_state, make_train_step,
+                              train_state_specs)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--remat", default="none", choices=["none", "full", "dots"])
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--hail-select", default="",
+                    help="col:lo:hi training-data selection via HAIL index")
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    n_dev = len(jax.devices())
+    mesh = (make_production_mesh(multi_pod=args.multi_pod) if n_dev >= 256
+            else make_host_mesh())
+    print(f"arch={cfg.name} devices={n_dev} mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
+
+    opt = OptCfg(lr=args.lr, warmup_steps=min(20, args.steps // 4),
+                 total_steps=args.steps)
+    step_cfg = StepCfg(remat=args.remat)
+    specs = train_state_specs(cfg, opt)
+
+    state = init_train_state(cfg, opt, jax.random.PRNGKey(0))
+    if args.ckpt_dir:
+        restored, step0 = ck.restore_latest(args.ckpt_dir, state, specs=specs,
+                                            mesh=mesh)
+        if restored is not None:
+            state = restored
+            print(f"resumed from step {step0} (elastic restore onto this mesh)")
+
+    with mesh:
+        step_fn = jax.jit(
+            make_train_step(cfg, opt, step_cfg, mesh),
+            out_shardings=(sh.shardings(specs, mesh), None))
+
+        if args.hail_select:
+            from repro.data.pipeline import CorpusConfig, HailDataSource, build_corpus
+            col, lo, hi = args.hail_select.split(":")
+            ccfg = CorpusConfig(n_docs=max(2048, args.batch * 64),
+                                seq_width=args.seq + 1, rows_per_block=256,
+                                partition_size=64, vocab=cfg.vocab)
+            store, _ = build_corpus(ccfg)
+            src = iter(HailDataSource(store, ccfg,
+                                      select=(col, int(lo), int(hi)),
+                                      batch_size=args.batch))
+            get_batch = lambda i: next(src)
+        else:
+            key = jax.random.PRNGKey(1)
+            def get_batch(i):
+                k = jax.random.fold_in(key, i)
+                tok = jax.random.randint(k, (args.batch, args.seq + 1), 0, cfg.vocab)
+                return {"tokens": tok[:, :-1], "labels": tok[:, 1:]}
+
+        saver = ck.AsyncSaver()
+        t0 = time.time()
+        start = int(state["step"])
+        for i in range(start, args.steps):
+            state, metrics = step_fn(state, get_batch(i))
+            if (i + 1) % 10 == 0 or i + 1 == args.steps:
+                toks = args.batch * args.seq * (i + 1 - start)
+                print(f"step {i + 1:5d} loss={float(metrics['loss']):.4f} "
+                      f"gnorm={float(metrics['grad_norm']):.2f} "
+                      f"tok/s={toks / (time.time() - t0):.0f}", flush=True)
+            if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
+                saver.save(state, args.ckpt_dir, i + 1)
+        saver.wait()
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

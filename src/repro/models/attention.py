@@ -1,0 +1,302 @@
+"""GQA attention: full/sliding-window masks, chunked online-softmax prefill,
+KV caches (full-length and ring/window caches for long-context decode).
+
+Cache layout per layer: {"k": (B, S, KV, Dh), "v": (B, S, KV, Dh),
+"pos": (B, S) int32 absolute positions (-1 = empty)}.  A *ring* cache is the
+same structure with S = window; slot = pos % window.  Keys are stored
+post-RoPE (absolute rotary), the standard serving convention.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttnCfg
+from repro.dist.sharding import TensorSpec, constrain, tspec
+from repro.models.common import apply_rope, rmsnorm, rmsnorm_spec
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameter / cache specs
+# ---------------------------------------------------------------------------
+
+
+def attn_specs(cfg: AttnCfg, d_model: int) -> dict[str, TensorSpec]:
+    h, kv, dh = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    s = {
+        "wq": tspec((d_model, h, dh), ("embed", "heads", "head_dim")),
+        "wk": tspec((d_model, kv, dh), ("embed", "kv_heads", "head_dim")),
+        "wv": tspec((d_model, kv, dh), ("embed", "kv_heads", "head_dim")),
+        "wo": tspec((h, dh, d_model), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = tspec((dh,), ("head_dim",), init="ones")
+        s["k_norm"] = tspec((dh,), ("head_dim",), init="ones")
+    return s
+
+
+def attn_cache_specs(cfg: AttnCfg, batch: int, cache_len: int,
+                     dtype=jnp.bfloat16) -> dict[str, TensorSpec]:
+    """cache_len should already account for ring caches (= min(S, window))."""
+    kv, dh = cfg.n_kv, cfg.head_dim
+    return {
+        "k": tspec((batch, cache_len, kv, dh), ("batch", "kv_seq", "act_kv_heads", "head_dim"), dtype, init="zeros"),
+        "v": tspec((batch, cache_len, kv, dh), ("batch", "kv_seq", "act_kv_heads", "head_dim"), dtype, init="zeros"),
+        "pos": tspec((batch, cache_len), ("batch", "kv_seq"), jnp.int32, init="zeros"),
+    }
+
+
+def cache_len_for(cfg: AttnCfg, seq_len: int) -> int:
+    if cfg.window is not None and seq_len > cfg.window:
+        return cfg.window
+    return seq_len
+
+
+# ---------------------------------------------------------------------------
+# Core attention math
+# ---------------------------------------------------------------------------
+
+
+def _project(params, x, cfg: AttnCfg, positions):
+    """x (B,T,D) -> q (B,T,H,Dh), k,v (B,T,KV,Dh); rope + optional qk-norm."""
+    dt = x.dtype
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"].astype(dt))
+    k = jnp.einsum("btd,dhk->bthk", x, params["wk"].astype(dt))
+    v = jnp.einsum("btd,dhk->bthk", x, params["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"])
+        k = rmsnorm(k, params["k_norm"])
+    if positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_section)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_section)
+    return q, k, v
+
+
+def _mask(q_pos, k_pos, cfg: AttnCfg):
+    """(..., T, S) boolean validity from absolute positions."""
+    m = k_pos[..., None, :] >= 0
+    if cfg.causal and not cfg.cross:
+        m &= k_pos[..., None, :] <= q_pos[..., :, None]
+    if cfg.window is not None and not cfg.cross:
+        m &= k_pos[..., None, :] > q_pos[..., :, None] - cfg.window
+    return m
+
+
+def _sdpa_full(q, k, v, q_pos, k_pos, cfg: AttnCfg):
+    """Materialized-scores attention. q (B,T,H,Dh), k/v (B,S,KV,Dh)."""
+    b, t, h, dh = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    rep = h // kvh
+    qg = q.reshape(b, t, kvh, rep, dh)
+    scores = jnp.einsum("btgrk,bsgk->bgrts", qg, k).astype(jnp.float32)
+    scores = scores / math.sqrt(dh)
+    if cfg.softcap:
+        scores = jnp.tanh(scores / cfg.softcap) * cfg.softcap
+    mask = _mask(q_pos, k_pos, cfg)[:, None, None]        # (B,1,1,T,S)
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bgrts,bsgk->btgrk", w, v)
+    return out.reshape(b, t, h, dh)
+
+
+def _sdpa_chunked(q, k, v, q_pos, k_pos, cfg: AttnCfg, chunk: int):
+    """Online-softmax over KV chunks (flash-style, pure jnp; memory O(T*chunk))."""
+    b, t, h, dh = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    rep = h // kvh
+    n_chunks = s // chunk
+    assert n_chunks * chunk == s, (s, chunk)
+    qg = (q.reshape(b, t, kvh, rep, dh).astype(jnp.float32) / math.sqrt(dh))
+
+    kc = k.reshape(b, n_chunks, chunk, kvh, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, kvh, dh).transpose(1, 0, 2, 3, 4)
+    pc = k_pos.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        acc, m, l = carry
+        kb, vb, pb = xs
+        sc = jnp.einsum("btgrk,bsgk->bgrts", qg, kb.astype(jnp.float32))
+        if cfg.softcap:
+            sc = jnp.tanh(sc / cfg.softcap) * cfg.softcap
+        msk = _mask(q_pos, pb, cfg)[:, None, None]
+        sc = jnp.where(msk, sc, NEG_INF)
+        m_new = jnp.maximum(m, sc.max(axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bgrts,bsgk->bgrtk", p, vb.astype(jnp.float32))
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((b, kvh, rep, t, dh), jnp.float32)
+    m0 = jnp.full((b, kvh, rep, t), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, rep, t), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), (kc, vc, pc))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, t, h, dh).astype(q.dtype)
+
+
+def _sdpa_banded(q, k, v, q_pos, k_pos, cfg: AttnCfg):
+    """Sliding-window attention in banded form: queries in chunks of W only
+    ever see keys in [chunk_start - W, chunk_end), so per-layer FLOPs/bytes
+    drop from O(T^2) to O(T * 2W).  Exact for window <= W (masks still
+    applied inside the band).  §Perf optimization for SWA prefill/train."""
+    w = cfg.window
+    b, t, h, dh = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    assert t == s and t % w == 0 and t // w >= 2
+    rep = h // kvh
+    nq = t // w
+    qg = (q.reshape(b, nq, w, kvh, rep, dh).astype(jnp.float32)
+          / math.sqrt(dh))
+    qp = q_pos.reshape(b, nq, w)
+
+    idx = (jnp.arange(nq, dtype=jnp.int32)[:, None] * w
+           + jnp.arange(2 * w, dtype=jnp.int32)[None, :])       # (nq, 2W) into padded
+    kpad = jnp.pad(k, ((0, 0), (w, 0), (0, 0), (0, 0)))
+    vpad = jnp.pad(v, ((0, 0), (w, 0), (0, 0), (0, 0)))
+    ppad = jnp.pad(k_pos, ((0, 0), (w, 0)), constant_values=-1)
+    kb = kpad[:, idx]                                           # (B,nq,2W,KV,Dh)
+    vb = vpad[:, idx]
+    pb = ppad[:, idx]                                           # (B,nq,2W)
+
+    sc = jnp.einsum("bnwgrk,bnsgk->bngrws", qg, kb.astype(jnp.float32))
+    if cfg.softcap:
+        sc = jnp.tanh(sc / cfg.softcap) * cfg.softcap
+    m = pb[:, :, None, :] >= 0
+    if cfg.causal:
+        m &= pb[:, :, None, :] <= qp[..., None]
+    m &= pb[:, :, None, :] > qp[..., None] - w
+    sc = jnp.where(m[:, :, None, None], sc, NEG_INF)
+    wts = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bngrws,bnsgk->bnwgrk", wts, vb.astype(jnp.float32))
+    return out.reshape(b, t, h, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Layer-level entry points
+# ---------------------------------------------------------------------------
+
+
+def attention(params, x, cfg: AttnCfg, *, positions, mode: str,
+              cache: Optional[dict], enc_kv=None, chunk: int = 1024,
+              cache_len: Optional[int] = None):
+    """Returns (out (B,T,D), new_cache).
+
+    mode='train'   : no cache.
+    mode='prefill' : builds cache (ring-truncated when window < S) with
+                     capacity ``cache_len`` (>= T; empty slots pos=-1) so
+                     subsequent decode steps append instead of overwriting.
+    mode='decode'  : T == 1; reads + updates cache at ``positions`` (B,1).
+    Cross-attention (cfg.cross): keys/values come from ``enc_kv`` (a dict with
+    'k','v','pos'), cached wholesale at prefill.
+    """
+    dt = x.dtype
+    b, t, d = x.shape
+
+    if cfg.cross:
+        return _cross_attention(params, x, cfg, cache=cache, enc_kv=enc_kv, mode=mode)
+
+    q, k, v = _project(params, x, cfg, positions)
+    # TP strategy: shard heads over 'model' when divisible; otherwise (e.g.
+    # gemma3-4b's 8 heads on a 16-way model axis) fall back to sharding the
+    # QUERY SEQUENCE over 'model' — context-parallel attention — instead of
+    # replicating the whole attention block 16x (§Perf iteration 7).
+    from repro.dist.sharding import ctx_axis_size
+    msize = ctx_axis_size("model")
+    heads_tp = msize is None or (cfg.n_heads % msize == 0)
+    q_axes = (("batch", "seq", "act_heads", "head_dim") if heads_tp
+              else ("batch", "act_seq_tp", "act_heads", "head_dim"))
+    q = constrain(q, q_axes)
+    k = constrain(k, ("batch", "seq", "act_kv_heads", "head_dim"))
+    # masking / cache bookkeeping uses the temporal stream for M-RoPE
+    mask_pos = positions[0] if positions.ndim == 3 else positions
+
+    if mode == "decode":
+        assert cache is not None and t == 1
+        slot = mask_pos[:, 0] % cache["k"].shape[1]           # ring or full
+        ck = _write_slot(cache["k"], k[:, 0], slot)
+        cv = _write_slot(cache["v"], v[:, 0], slot)
+        cp = _write_slot(cache["pos"], mask_pos[:, 0], slot)
+        new_cache = {"k": ck, "v": cv, "pos": cp}
+        out = _sdpa_full(q, ck, cv, mask_pos, cp, cfg)
+    else:
+        if mode == "prefill":
+            clen = cache_len_for(cfg, max(cache_len or t, t))
+            if clen < t:   # ring cache: keep the last `window` positions
+                new_cache = {"k": _ring_tail(k, clen), "v": _ring_tail(v, clen),
+                             "pos": _ring_tail(mask_pos[..., None], clen)[..., 0]}
+            else:          # full cache padded to capacity; empty slots pos=-1
+                pad = clen - t
+                new_cache = {
+                    "k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                    "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                    "pos": jnp.pad(mask_pos, ((0, 0), (0, pad)),
+                                   constant_values=-1),
+                }
+        else:
+            new_cache = None
+        use_banded = (cfg.window is not None and not cfg.cross
+                      and t % cfg.window == 0 and t // cfg.window >= 2)
+        use_chunked = t * k.shape[1] > 4096 * 4096 and k.shape[1] % chunk == 0
+        if use_banded:
+            out = _sdpa_banded(q, k, v, mask_pos, mask_pos, cfg)
+        elif use_chunked:
+            out = _sdpa_chunked(q, k, v, mask_pos, mask_pos, cfg, chunk)
+        else:
+            out = _sdpa_full(q, k, v, mask_pos, mask_pos, cfg)
+
+    out = jnp.einsum("bthk,hkd->btd", out, params["wo"].astype(dt))
+    out = constrain(out, ("batch", "seq", "act_embed"))
+    return out, new_cache
+
+
+def _write_slot(buf, val, slot):
+    """buf (B,S,...) <- val (B,...) at per-batch slot (B,) int32."""
+    bidx = jnp.arange(buf.shape[0])
+    return buf.at[bidx, slot].set(val.astype(buf.dtype))
+
+
+def _ring_tail(arr, clen):
+    """Last clen positions of (B,T,...), laid out so slot = pos % clen."""
+    b, t = arr.shape[:2]
+    tail = arr[:, t - clen:]
+    # roll so that absolute position p sits at slot p % clen
+    shift = (t - clen) % clen
+    return jnp.roll(tail, shift=shift, axis=1)
+
+
+def _cross_attention(params, x, cfg: AttnCfg, *, cache, enc_kv, mode):
+    dt = x.dtype
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"].astype(dt))
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"])
+    if mode == "decode":
+        k, v, kp = cache["k"], cache["v"], cache["pos"]
+        new_cache = cache
+    else:
+        xe = enc_kv  # encoder hidden states (B, S_enc, D)
+        k = jnp.einsum("bsd,dhk->bshk", xe, params["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", xe, params["wv"].astype(dt))
+        kp = jnp.broadcast_to(jnp.arange(k.shape[1], dtype=jnp.int32)[None],
+                              k.shape[:2])
+        new_cache = {"k": k, "v": v, "pos": kp} if mode == "prefill" else None
+    q_pos = jnp.zeros(q.shape[:2], jnp.int32)   # cross-attn: no causal mask
+    out = _sdpa_full(q, k, v, q_pos, kp, cfg)
+    out = jnp.einsum("bthk,hkd->btd", out, params["wo"].astype(dt))
+    return out, new_cache
+
+
+def cross_cache_specs(cfg: AttnCfg, batch: int, enc_len: int,
+                      dtype=jnp.bfloat16) -> dict[str, TensorSpec]:
+    kv, dh = cfg.n_kv, cfg.head_dim
+    return {
+        "k": tspec((batch, enc_len, kv, dh), ("batch", "kv_seq", "act_kv_heads", "head_dim"), dtype, init="zeros"),
+        "v": tspec((batch, enc_len, kv, dh), ("batch", "kv_seq", "act_kv_heads", "head_dim"), dtype, init="zeros"),
+        "pos": tspec((batch, enc_len), ("batch", "kv_seq"), jnp.int32, init="zeros"),
+    }

@@ -1,0 +1,100 @@
+"""Shared model components: RMSNorm, RoPE (incl. M-RoPE), embedding specs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import TensorSpec, tspec
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_spec(d: int) -> TensorSpec:
+    return tspec((d,), ("act_embed",), init="ones")
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def _rope_angles(positions: jax.Array, dim: int, theta: float) -> jax.Array:
+    """positions (...,) -> angles (..., dim//2)."""
+    half = dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    return positions[..., None].astype(jnp.float32) * freqs
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0,
+               mrope_section: tuple[int, ...] | None = None) -> jax.Array:
+    """Rotate pairs (x[..., :half], x[..., half:]).
+
+    x: (B, T, H, D). positions: (B, T) — or (3, B, T) for M-RoPE, where the
+    head-dim half is split into ``mrope_section`` chunks rotated by the t/h/w
+    position streams respectively (Qwen2-VL).
+    """
+    d = x.shape[-1]
+    half = d // 2
+    if mrope_section is None:
+        ang = _rope_angles(positions, d, theta)          # (B, T, half)
+    else:
+        assert positions.ndim == 3 and positions.shape[0] == len(mrope_section)
+        parts = [
+            _mrope_part(positions[i], sec, d, theta, sum(mrope_section[:i]))
+            for i, sec in enumerate(mrope_section)
+        ]
+        ang = jnp.concatenate(parts, axis=-1)            # (B, T, half)
+    sin = jnp.sin(ang)[:, :, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    dt = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(dt)
+
+
+def _mrope_part(pos: jax.Array, sec: int, d: int, theta: float, offset: int) -> jax.Array:
+    """Frequencies for an M-RoPE section use the *global* frequency ladder
+    (indices offset..offset+sec of the d//2 ladder), per Qwen2-VL."""
+    half = d // 2
+    idx = jnp.arange(offset, offset + sec, dtype=jnp.float32)
+    freqs = theta ** (-idx / half)
+    return pos[..., None].astype(jnp.float32) * freqs
+
+
+def default_positions(batch: int, seq: int, mrope: bool = False) -> jax.Array:
+    p = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None], (batch, seq))
+    if mrope:
+        return jnp.broadcast_to(p[None], (3, batch, seq))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+
+
+def embed_spec(vocab: int, d: int) -> TensorSpec:
+    return tspec((vocab, d), ("vocab", "embed"), init="embed")
+
+
+def unembed_spec(d: int, vocab: int) -> TensorSpec:
+    return tspec((d, vocab), ("embed", "vocab"))
+
+
+def embed_tokens(table: jax.Array, tokens: jax.Array, scale: float | None,
+                 dtype=jnp.bfloat16) -> jax.Array:
+    x = table.astype(dtype)[tokens]
+    if scale is not None:
+        x = x * jnp.asarray(scale, dtype)
+    return x

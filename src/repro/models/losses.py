@@ -1,0 +1,51 @@
+"""Losses: standard softmax cross-entropy + a vocab-memory-friendly chunked
+variant (computes per-sequence-chunk logits inside a scan so the full
+(B, T, V) tensor is never materialized — a §Perf memory-term lever for the
+262k-vocab archs)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def xent(logits: jax.Array, labels: jax.Array, mask=None):
+    """logits (B,T,V) f32, labels (B,T) int32 -> scalar mean nll."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(nll.dtype)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def chunked_xent(x: jax.Array, head: jax.Array, labels: jax.Array,
+                 n_chunks: int = 8, mask=None):
+    """x (B,T,D) final hidden states, head (D,V). Scans over T chunks."""
+    b, t, d = x.shape
+    assert t % n_chunks == 0
+    tc = t // n_chunks
+    xs = x.reshape(b, n_chunks, tc, d).swapaxes(0, 1)
+    ls = labels.reshape(b, n_chunks, tc).swapaxes(0, 1)
+    if mask is None:
+        ms = jnp.ones((n_chunks, b, tc), jnp.float32)
+    else:
+        ms = mask.reshape(b, n_chunks, tc).swapaxes(0, 1).astype(jnp.float32)
+
+    def body(acc, xs_):
+        xc, lc, mc = xs_
+
+        @jax.checkpoint
+        def inner(xc, lc, mc):
+            logits = jnp.einsum("btd,dv->btv", xc, head.astype(xc.dtype))
+            logits = logits.astype(jnp.float32)
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+            return ((logz - gold) * mc).sum(), mc.sum()
+
+        s, m = inner(xc, lc, mc)
+        return (acc[0] + s, acc[1] + m), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                 (xs, ls, ms))
+    return tot / jnp.maximum(cnt, 1.0)

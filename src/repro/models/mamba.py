@@ -1,0 +1,290 @@
+"""Selective state-space layers.
+
+Mamba1 (falcon-mamba): per-channel diagonal SSM, chunked parallel scan —
+``lax.scan`` over chunks carrying the (B, d_inner, N) state, an associative
+scan *inside* each chunk (wrapped in ``jax.checkpoint`` so backward recomputes
+chunk internals instead of saving (B,Tc,d,N) tensors).
+
+Mamba2 (zamba2): SSD formulation — scalar decay per head; chunked
+intra-(quadratic)/inter-(state) decomposition.
+
+Both support: train (no cache), prefill (emit final state + conv tail),
+decode (single-step recurrence).  Oracles: tests compare against a naive
+per-timestep recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import Mamba1Cfg, Mamba2Cfg
+from repro.dist.sharding import TensorSpec, constrain, tspec
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv (width w) over (B, T, C)
+# ---------------------------------------------------------------------------
+
+
+def causal_conv(x, w, b, tail=None):
+    """x (B,T,C), w (W,C), b (C,). tail (B,W-1,C) prepended (decode/chunk)."""
+    width = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i: i + x.shape[1]] * w[i].astype(x.dtype)
+              for i in range(width))
+    return out + b.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba1
+# ---------------------------------------------------------------------------
+
+
+def mamba1_specs(cfg: Mamba1Cfg, d_model: int) -> dict[str, TensorSpec]:
+    di, n, r, w = cfg.d_inner, cfg.d_state, cfg.dt_rank or d_model // 16, cfg.conv_width
+    return {
+        "in_proj": tspec((d_model, 2 * di), ("embed", "ssm_inner")),
+        "conv_w": tspec((w, di), (None, "conv_dim"), scale=0.2),
+        "conv_b": tspec((di,), ("conv_dim",), init="zeros"),
+        "x_proj": tspec((di, r + 2 * n), ("ssm_inner", None)),
+        "dt_proj": tspec((r, di), ("dt_rank", "ssm_inner"), scale=r**-0.5),
+        "dt_bias": tspec((di,), ("ssm_inner",), init="zeros"),
+        "A_log": tspec((di, n), ("ssm_inner", "ssm_state"), init="zeros"),
+        "D": tspec((di,), ("ssm_inner",), init="ones"),
+        "out_proj": tspec((di, d_model), ("ssm_inner", "embed")),
+    }
+
+
+def mamba1_cache_specs(cfg: Mamba1Cfg, d_model: int, batch: int,
+                       dtype=jnp.bfloat16) -> dict[str, TensorSpec]:
+    di, n, w = cfg.d_inner, cfg.d_state, cfg.conv_width
+    return {
+        "conv": tspec((batch, w - 1, di), ("batch", None, "ssm_inner"), dtype, init="zeros"),
+        "state": tspec((batch, di, n), ("batch", "ssm_inner", "ssm_state"), jnp.float32, init="zeros"),
+    }
+
+
+def _chunk_len(t: int, chunk: int) -> int:
+    """Largest divisor of t that is <= chunk (odd prefill lengths fall back
+    to shorter chunks rather than failing)."""
+    tc = min(chunk, t)
+    while t % tc:
+        tc -= 1
+    return tc
+
+
+def _m1_scan_chunk(h0, a, b, serial: bool = False):
+    """h0 (B,d,N); a,b (B,Tc,d,N). Returns h_all (B,Tc,d,N).
+
+    serial=True: plain sequential scan over the chunk.  Hypothesis (§Perf
+    iteration 8) was that log-depth associative scans touch HBM O(log Tc)
+    times per element while a state-resident serial scan touches inputs
+    once; MEASURED REFUTED on the compiled-HLO roofline (memory term 161s
+    -> 319s): the per-step transposes + autodiff residuals of a 64-step
+    while loop outweigh the level savings, and XLA fuses associative-scan
+    levels better than assumed.  Kept selectable for documentation; the
+    real fix for mamba1's memory term is a fused Pallas selective-scan
+    kernel (kernels/ roadmap)."""
+    if serial:
+        def step(h, ab):
+            at, bt = ab
+            h = at * h + bt
+            return h, h
+
+        _, hs = jax.lax.scan(step, h0, (a.swapaxes(0, 1), b.swapaxes(0, 1)))
+        return hs.swapaxes(0, 1)
+
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    a_cum, b_cum = jax.lax.associative_scan(comb, (a, b), axis=1)
+    return a_cum * h0[:, None] + b_cum
+
+
+def mamba1(params, x, cfg: Mamba1Cfg, *, mode: str, cache):
+    dt_ = x.dtype
+    bsz, t, d_model = x.shape
+    di, n = cfg.d_inner, cfg.d_state
+    r = cfg.dt_rank or d_model // 16
+
+    xz = jnp.einsum("btd,de->bte", x, params["in_proj"].astype(dt_))
+    xz = constrain(xz, ("batch", "seq", "ssm_inner"))
+    xa, z = jnp.split(xz, 2, axis=-1)
+
+    conv_tail = cache["conv"] if cache is not None else None
+    xa_raw = xa
+    xa = jax.nn.silu(causal_conv(xa, params["conv_w"], params["conv_b"], conv_tail))
+
+    dbc = jnp.einsum("bte,ef->btf", xa, params["x_proj"].astype(dt_))
+    dt_r, bc, cc = jnp.split(dbc, [r, r + n], axis=-1)
+    delta = jax.nn.softplus(
+        jnp.einsum("btr,re->bte", dt_r, params["dt_proj"].astype(dt_)).astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32))                     # (B,T,di) f32
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))                # (di,N)
+    bc32, cc32, xa32 = bc.astype(jnp.float32), cc.astype(jnp.float32), xa.astype(jnp.float32)
+
+    h_init = (cache["state"] if cache is not None
+              else jnp.zeros((bsz, di, n), jnp.float32))
+
+    if mode == "decode":
+        assert t == 1
+        a = jnp.exp(delta[:, 0, :, None] * A)                        # (B,di,N)
+        b = (delta[:, 0] * xa32[:, 0])[..., None] * bc32[:, 0, None, :]
+        h = a * h_init + b
+        y = jnp.einsum("bdn,bn->bd", h, cc32[:, 0])[:, None]         # (B,1,di)
+        new_cache = {"conv": jnp.concatenate(
+            [conv_tail[:, 1:], xa_raw], axis=1).astype(conv_tail.dtype),
+            "state": h}
+    else:
+        tc = _chunk_len(t, cfg.chunk)
+        nc = t // tc
+
+        def chunk_body(h0, xs):
+            delta_c, xa_c, bc_c, cc_c = xs
+
+            @jax.checkpoint
+            def inner(h0, delta_c, xa_c, bc_c, cc_c):
+                a = jnp.exp(delta_c[..., None] * A)                  # (B,Tc,di,N)
+                b = (delta_c * xa_c)[..., None] * bc_c[:, :, None, :]
+                h = _m1_scan_chunk(h0, a, b)
+                y = jnp.einsum("btdn,btn->btd", h, cc_c)
+                return h[:, -1], y
+
+            return inner(h0, delta_c, xa_c, bc_c, cc_c)
+
+        def to_chunks(arr):
+            return arr.reshape(bsz, nc, tc, *arr.shape[2:]).swapaxes(0, 1)
+
+        h_last, y = jax.lax.scan(
+            chunk_body, h_init,
+            (to_chunks(delta), to_chunks(xa32), to_chunks(bc32), to_chunks(cc32)))
+        y = y.swapaxes(0, 1).reshape(bsz, t, di)
+        if mode == "prefill":
+            tail_len = cfg.conv_width - 1
+            new_cache = {"conv": xa_raw[:, t - tail_len:].astype(dt_),
+                         "state": h_last}
+        else:
+            new_cache = None
+
+    y = y.astype(dt_) + params["D"].astype(dt_) * xa
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bte,ed->btd", y, params["out_proj"].astype(dt_))
+    return constrain(out, ("batch", "seq", "act_embed")), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_specs(cfg: Mamba2Cfg, d_model: int) -> dict[str, TensorSpec]:
+    di, n, p, w = cfg.d_inner, cfg.d_state, cfg.head_dim, cfg.conv_width
+    h = di // p
+    conv_dim = di + 2 * n
+    return {
+        "in_proj": tspec((d_model, 2 * di + 2 * n + h), ("embed", "ssm_inner")),
+        "conv_w": tspec((w, conv_dim), (None, "conv_dim"), scale=0.2),
+        "conv_b": tspec((conv_dim,), ("conv_dim",), init="zeros"),
+        "A_log": tspec((h,), ("ssm_heads",), init="zeros"),
+        "dt_bias": tspec((h,), ("ssm_heads",), init="zeros"),
+        "D": tspec((h,), ("ssm_heads",), init="ones"),
+        "norm": tspec((di,), ("ssm_inner",), init="ones"),
+        "out_proj": tspec((di, d_model), ("ssm_inner", "embed")),
+    }
+
+
+def mamba2_cache_specs(cfg: Mamba2Cfg, d_model: int, batch: int,
+                       dtype=jnp.bfloat16) -> dict[str, TensorSpec]:
+    di, n, p, w = cfg.d_inner, cfg.d_state, cfg.head_dim, cfg.conv_width
+    h = di // p
+    return {
+        "conv": tspec((batch, w - 1, di + 2 * n), ("batch", None, "conv_dim"), dtype, init="zeros"),
+        "state": tspec((batch, h, p, n), ("batch", "ssm_heads", None, "ssm_state"), jnp.float32, init="zeros"),
+    }
+
+
+def mamba2(params, x, cfg: Mamba2Cfg, *, mode: str, cache):
+    from repro.models.common import rmsnorm
+
+    dt_ = x.dtype
+    bsz, t, d_model = x.shape
+    di, n, p = cfg.d_inner, cfg.d_state, cfg.head_dim
+    nh = di // p
+
+    zxd = jnp.einsum("btd,de->bte", x, params["in_proj"].astype(dt_))
+    zxd = constrain(zxd, ("batch", "seq", "ssm_inner"))
+    z, xbc, dt_head = jnp.split(zxd, [di, 2 * di + 2 * n], axis=-1)
+
+    conv_tail = cache["conv"] if cache is not None else None
+    xbc_raw = xbc
+    xbc = jax.nn.silu(causal_conv(xbc, params["conv_w"], params["conv_b"], conv_tail))
+    xs, b_in, c_in = jnp.split(xbc, [di, di + n], axis=-1)
+    xs = xs.reshape(bsz, t, nh, p).astype(jnp.float32)
+    b32, c32 = b_in.astype(jnp.float32), c_in.astype(jnp.float32)
+
+    delta = jax.nn.softplus(dt_head.astype(jnp.float32)
+                            + params["dt_bias"].astype(jnp.float32))  # (B,T,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))                 # (H,)
+    da = delta * A                                                    # (B,T,H)
+
+    s_init = (cache["state"] if cache is not None
+              else jnp.zeros((bsz, nh, p, n), jnp.float32))
+
+    if mode == "decode":
+        assert t == 1
+        decay = jnp.exp(da[:, 0])                                     # (B,H)
+        upd = jnp.einsum("bh,bhp,bn->bhpn", delta[:, 0], xs[:, 0], b32[:, 0])
+        s = decay[..., None, None] * s_init + upd
+        y = jnp.einsum("bn,bhpn->bhp", c32[:, 0], s)[:, None]         # (B,1,H,P)
+        y = y + params["D"].astype(jnp.float32)[:, None] * xs[:, :1]
+        new_cache = {"conv": jnp.concatenate(
+            [conv_tail[:, 1:], xbc_raw], axis=1).astype(conv_tail.dtype),
+            "state": s}
+    else:
+        tc = _chunk_len(t, cfg.chunk)
+        nc = t // tc
+
+        def chunk_body(s0, xs_):
+            da_c, x_c, b_c, c_c, delta_c = xs_
+
+            @jax.checkpoint
+            def inner(s0, da_c, x_c, b_c, c_c, delta_c):
+                cum = jnp.cumsum(da_c, axis=1)                        # (B,Tc,H)
+                li = cum[:, :, None, :] - cum[:, None, :, :]          # (B,i,j,H)
+                tri = jnp.tril(jnp.ones((tc, tc), bool))
+                L = jnp.where(tri[None, :, :, None], jnp.exp(li), 0.0)
+                sc = jnp.einsum("bin,bjn->bij", c_c, b_c)
+                xw = x_c * delta_c[..., None]                          # (B,Tc,H,P)
+                y = jnp.einsum("bij,bijh,bjhp->bihp", sc, L, xw)
+                y = y + jnp.einsum("bih,bin,bhpn->bihp", jnp.exp(cum), c_c, s0)
+                dec_out = jnp.exp(cum[:, -1:, :] - cum)               # (B,Tc,H)
+                s_new = (jnp.exp(cum[:, -1])[..., None, None] * s0
+                         + jnp.einsum("bjh,bjn,bjhp->bhpn", dec_out * delta_c, b_c, x_c))
+                return s_new, y
+
+            return inner(s0, da_c, x_c, b_c, c_c, delta_c)
+
+        def to_chunks(arr):
+            return arr.reshape(bsz, nc, tc, *arr.shape[2:]).swapaxes(0, 1)
+
+        s_last, y = jax.lax.scan(
+            chunk_body, s_init,
+            (to_chunks(da), to_chunks(xs), to_chunks(b32), to_chunks(c32),
+             to_chunks(delta)))
+        y = y.swapaxes(0, 1).reshape(bsz, t, nh, p)
+        y = y + params["D"].astype(jnp.float32)[:, None] * xs.reshape(bsz, t, nh, p)
+        if mode == "prefill":
+            tail_len = cfg.conv_width - 1
+            new_cache = {"conv": xbc_raw[:, t - tail_len:].astype(dt_),
+                         "state": s_last}
+        else:
+            new_cache = None
+
+    y = y.reshape(bsz, t, di).astype(dt_)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm"])
+    out = jnp.einsum("bte,ed->btd", y, params["out_proj"].astype(dt_))
+    return constrain(out, ("batch", "seq", "act_embed")), new_cache

@@ -1,0 +1,34 @@
+"""Dense feed-forward: SwiGLU (gated) or GeLU MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MlpCfg
+from repro.dist.sharding import TensorSpec, constrain, tspec
+
+
+def mlp_specs(cfg: MlpCfg, d_model: int) -> dict[str, TensorSpec]:
+    if cfg.gated:
+        return {
+            "w_gate": tspec((d_model, cfg.d_ff), ("embed", "mlp")),
+            "w_up": tspec((d_model, cfg.d_ff), ("embed", "mlp")),
+            "w_down": tspec((cfg.d_ff, d_model), ("mlp", "embed")),
+        }
+    return {
+        "w_up": tspec((d_model, cfg.d_ff), ("embed", "mlp")),
+        "w_down": tspec((cfg.d_ff, d_model), ("mlp", "embed")),
+    }
+
+
+def mlp(params, x, cfg: MlpCfg):
+    dt = x.dtype
+    up = jnp.einsum("btd,df->btf", x, params["w_up"].astype(dt))
+    if cfg.gated:
+        gate = jnp.einsum("btd,df->btf", x, params["w_gate"].astype(dt))
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    h = constrain(h, ("batch", "seq", "act_mlp"))
+    out = jnp.einsum("btf,fd->btd", h, params["w_down"].astype(dt))
+    return constrain(out, ("batch", "seq", "act_embed"))

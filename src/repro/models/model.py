@@ -1,0 +1,117 @@
+"""Top-level models: decoder-only LM and encoder-decoder (whisper).
+
+Pure-function API over TensorSpec param trees:
+  model_specs(cfg)                      -> param spec pytree (no allocation)
+  model_cache_specs(cfg, batch, S, ...) -> KV/SSM cache spec pytree
+  forward(params, cfg, inputs, ...)     -> logits (+ cache for prefill/decode)
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelCfg
+from repro.dist.sharding import constrain, tspec
+from repro.models.common import (default_positions, embed_spec, embed_tokens,
+                                 rmsnorm, rmsnorm_spec, unembed_spec)
+from repro.models.stack import apply_stack, stack_cache_specs, stack_specs
+
+
+def model_specs(cfg: ModelCfg) -> dict[str, Any]:
+    d = cfg.d_model
+    s: dict[str, Any] = {
+        "embed": embed_spec(cfg.vocab, d),
+        "stack": stack_specs(cfg.stack, d),
+        "final_norm": rmsnorm_spec(d),
+    }
+    if not cfg.tie_embeddings:
+        s["lm_head"] = unembed_spec(d, cfg.vocab)
+    if cfg.encoder is not None:
+        s["encoder"] = stack_specs(cfg.encoder, d)
+        s["enc_norm"] = rmsnorm_spec(d)
+    return s
+
+
+def model_cache_specs(cfg: ModelCfg, batch: int, seq_len: int,
+                      enc_len: int | None = None,
+                      dtype=jnp.bfloat16) -> dict[str, Any]:
+    return stack_cache_specs(cfg.stack, cfg.d_model, batch, seq_len,
+                             enc_len, dtype)
+
+
+def _mrope(cfg: ModelCfg) -> bool:
+    for lc in cfg.stack.pattern + cfg.stack.tail:
+        if lc.attn is not None and lc.attn.mrope_section:
+            return True
+    return False
+
+
+def encode(params, cfg: ModelCfg, enc_inputs, *, remat="none"):
+    """Encoder forward (whisper): enc_inputs (B, S_enc, D) stub embeddings."""
+    x = enc_inputs.astype(cfg.compute_dtype)
+    b, s, _ = x.shape
+    aux = {"positions": default_positions(b, s), "enc": None}
+    x, _ = apply_stack(params["encoder"], x, cfg.encoder, mode="train",
+                       cache=None, aux=aux, eps=cfg.norm_eps, remat=remat)
+    return rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def lm_head(params, cfg: ModelCfg):
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def forward(params, cfg: ModelCfg, inputs, *, mode: str = "train",
+            cache=None, positions=None, enc_inputs=None, remat: str = "none",
+            logits_f32: bool = True, return_hidden: bool = False,
+            cache_len: Optional[int] = None):
+    """inputs: tokens (B,T) int32, or embeddings (B,T,D) when
+    cfg.embed_inputs is False (audio/vlm stub frontends) in train/prefill.
+
+    Returns logits (B,T,V) for train; (logits, cache) for prefill/decode.
+    """
+    dt = cfg.compute_dtype
+    if inputs.ndim == 2:  # token ids
+        scale = math.sqrt(cfg.d_model) if cfg.embed_scale else None
+        x = embed_tokens(params["embed"], inputs, scale, dt)
+    else:
+        x = inputs.astype(dt)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), dt)
+    x = constrain(x, ("batch", "seq", "act_embed"))
+    b, t = x.shape[:2]
+
+    if positions is None:
+        positions = default_positions(b, t, _mrope(cfg))
+
+    enc = None
+    if cfg.encoder is not None and mode != "decode":
+        assert enc_inputs is not None, "enc-dec model needs encoder inputs"
+        enc = encode(params, cfg, enc_inputs, remat=remat)
+
+    aux = {"positions": positions, "enc": enc, "cache_len": cache_len}
+    x, new_cache = apply_stack(params["stack"], x, cfg.stack, mode=mode,
+                               cache=cache, aux=aux, eps=cfg.norm_eps,
+                               remat=remat)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x if mode == "train" else (x, new_cache)
+
+    head = lm_head(params, cfg)
+    logits = jnp.einsum("btd,dv->btv", x, head.astype(dt))
+    logits = constrain(logits, ("batch", "seq", "act_vocab"))
+    if logits_f32:
+        logits = logits.astype(jnp.float32)
+    if mode == "train":
+        return logits
+    return logits, new_cache
+
+
+def decode_positions(pos, batch: int, mrope: bool = False):
+    """pos: scalar int32 -> (B,1) positions (or (3,B,1) for mrope)."""
+    p = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(1, 1), (batch, 1))
+    if mrope:
+        return jnp.broadcast_to(p[None], (3, batch, 1))
+    return p

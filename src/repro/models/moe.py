@@ -1,0 +1,153 @@
+"""Top-k routed Mixture-of-Experts with GROUPED capacity-bounded dispatch.
+
+Tokens are split into ``n_groups`` contiguous groups aligned with the batch
+sharding (GShard semantics): router positions/capacity are computed WITHIN a
+group, so the dispatch scatter is local to the data shard that owns the
+group, and the (groups -> experts) reshard of the dispatch buffer lowers to
+one all-to-all per layer under GSPMD instead of the pathological
+all-gather+scatter a global-index dispatch produces (§Perf iteration 2:
+~25 TB/device of collectives on mixtral-8x22b -> ~40 GB).
+
+Tokens beyond per-(group, expert) capacity are dropped (standard
+GShard/Switch semantics, capacity_factor-controlled).  Arctic-style parallel
+*dense residual* MLP supported via cfg.dense_residual_ff.
+
+Invariants (property-tested in tests/test_models.py):
+  * each token routes to exactly top_k distinct experts;
+  * combine weights of kept assignments match softmaxed router gates;
+  * with a generous capacity_factor nothing is dropped and the layer equals
+    the per-token dense mixture oracle.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MlpCfg, MoECfg
+from repro.dist.sharding import TensorSpec, constrain, tspec
+from repro.models.mlp import mlp, mlp_specs
+
+DEFAULT_GROUPS = 32
+
+
+def moe_specs(cfg: MoECfg, d_model: int) -> dict[str, TensorSpec]:
+    e, f = cfg.n_experts, cfg.d_ff
+    s = {
+        "router": tspec((d_model, e), ("embed", "expert"), scale=d_model**-0.5),
+        "w_gate": tspec((e, d_model, f), ("expert", "embed", "expert_mlp")),
+        "w_up": tspec((e, d_model, f), ("expert", "embed", "expert_mlp")),
+        "w_down": tspec((e, f, d_model), ("expert", "expert_mlp", "embed")),
+    }
+    if cfg.dense_residual_ff:
+        for k, v in mlp_specs(MlpCfg(cfg.dense_residual_ff), d_model).items():
+            s["res_" + k] = v
+    return s
+
+
+def group_count(n_tokens: int, want: int | None = None) -> int:
+    """Groups scale with token count: decode-sized batches (<=256 tokens)
+    use ONE group — per-(group,expert) capacity floors otherwise inflate the
+    dispatch buffer ~100x for one-token steps (§Perf iteration 9: arctic
+    decode_32k collective 2.4s -> back under the baseline)."""
+    if want is None:
+        want = min(DEFAULT_GROUPS, max(1, n_tokens // 256))
+    g = min(want, n_tokens)
+    while n_tokens % g:
+        g -= 1
+    return g
+
+
+def capacity(cfg: MoECfg, group_tokens: int) -> int:
+    c = int(math.ceil(cfg.capacity_factor * group_tokens * cfg.top_k
+                      / cfg.n_experts))
+    return max(4, -(-c // 4) * 4)  # round up to multiple of 4 (TPU lanes)
+
+
+def moe(params, x, cfg: MoECfg, *, return_aux: bool = False):
+    """x (B,T,D) -> (B,T,D). Router in fp32; experts in compute dtype."""
+    dt = x.dtype
+    b, t, d = x.shape
+    n = b * t
+    e, k = cfg.n_experts, cfg.top_k
+    g = group_count(n)
+    ng = n // g                                  # tokens per group
+    cap = capacity(cfg, ng)
+
+    xg = x.reshape(g, ng, d)
+    xg = constrain(xg, ("moe_group", None, "act_embed"))
+    logits = jnp.einsum("gnd,de->gne", xg.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    top_logits, top_idx = jax.lax.top_k(logits, k)            # (G,ng,k)
+    gates = jax.nn.softmax(top_logits, axis=-1)               # mixtral-style
+
+    # position of each (token, slot) within its (group, expert)
+    onehot = jax.nn.one_hot(top_idx, e, dtype=jnp.int32)      # (G,ng,k,E)
+    flat = onehot.reshape(g, ng * k, e)
+    pos = jnp.cumsum(flat, axis=1) - flat                     # exclusive
+    pos = (pos * flat).sum(-1).reshape(g, ng, k)              # (G,ng,k)
+    keep = pos < cap
+    dest = top_idx * cap + pos                                # (G,ng,k)
+
+    # local scatter into per-group dispatch buffers (G, E*cap, D).  vmap over
+    # the group axis makes it a *batched* scatter (operand_batching_dims), so
+    # GSPMD partitions it on the group shard instead of replicating
+    # (explicit 2D index arrays defeat the partitioner — §Perf iteration 6).
+    src = (xg[:, :, None, :] * keep[..., None].astype(dt)).reshape(g, ng * k, d)
+
+    def _scatter_one(idx, upd):
+        return jnp.zeros((e * cap, d), dt).at[idx].add(upd, mode="drop")
+
+    disp = jax.vmap(_scatter_one)(dest.reshape(g, ng * k), src)
+    disp = disp.reshape(g, e, cap, d)
+    # groups->experts reshard: one all-to-all per layer under GSPMD
+    disp = constrain(disp, ("moe_group", "expert", "moe_cap", "act_embed"))
+
+    gate = jnp.einsum("gecd,edf->gecf", disp, params["w_gate"].astype(dt))
+    up = jnp.einsum("gecd,edf->gecf", disp, params["w_up"].astype(dt))
+    h = jax.nn.silu(gate) * up
+    h = constrain(h, ("moe_group", "expert", "moe_cap", "expert_mlp"))
+    out = jnp.einsum("gecf,efd->gecd", h, params["w_down"].astype(dt))
+    out = out.reshape(g, e * cap, d)
+    # experts -> groups reshard (the inverse all-to-all) BEFORE the combine
+    # gather, so the gather itself is local to the group's data shard —
+    # without this, GSPMD replicates the whole dispatch buffer per device
+    # (§Perf iteration 5: arctic collective 612s -> see EXPERIMENTS.md).
+    out = constrain(out, ("moe_group", None, "act_embed"))
+
+    # combine: batched gather of each kept assignment back to its token
+    gathered = jax.vmap(lambda o, i: o[i])(out, dest.reshape(g, ng * k))
+    gathered = gathered.reshape(g, ng, k, d)
+    w = (gates.astype(dt) * keep.astype(dt))[..., None]
+    y = (gathered * w).sum(axis=2).reshape(b, t, d)
+    y = constrain(y, ("batch", "seq", "act_embed"))
+
+    if cfg.dense_residual_ff:
+        res = {kk[4:]: v for kk, v in params.items() if kk.startswith("res_")}
+        y = y + mlp(res, x, MlpCfg(cfg.dense_residual_ff))
+
+    if return_aux:
+        aux = {
+            "kept_fraction": keep.mean(),
+            "router_entropy": -(jax.nn.softmax(logits, -1)
+                                * jax.nn.log_softmax(logits, -1)).sum(-1).mean(),
+            "load_balance_loss": load_balance_loss(logits, top_idx),
+            "top_idx": top_idx.reshape(n, k),
+            "pos": pos.reshape(n, k),
+            "gates": gates.reshape(n, k),
+        }
+        return y, aux
+    return y
+
+
+def load_balance_loss(router_logits, top_idx):
+    """Switch-style auxiliary loss: E * sum_e f_e * p_e, where f_e is the
+    fraction of tokens routed to expert e and p_e the mean router prob.
+    Minimized (=1) at perfectly uniform routing; add with a small coeff to
+    the LM loss to keep experts from collapsing."""
+    e = router_logits.shape[-1]
+    probs = jax.nn.softmax(router_logits, axis=-1)          # (G,ng,E)
+    frac = jax.nn.one_hot(top_idx, e).mean(axis=(0, 1, 2))  # (E,) routed frac
+    pmean = probs.mean(axis=(0, 1))                         # (E,)
+    return e * jnp.sum(frac * pmean)

@@ -1,0 +1,213 @@
+"""Layer-stack pattern machinery.
+
+A model stack is a repeated *pattern* of layer configs (e.g. gemma3's
+[local, local, local, local, local, global]), executed as ``lax.scan`` over
+pattern *groups* with group-stacked parameters — HLO stays small enough that a
+512-device GSPMD compile takes seconds.  A partial ``tail`` runs unscanned
+after the groups (gemma3-4b: 34 = 5*6 + 4).  ``kind='shared'`` positions reuse
+a single shared parameter set (zamba2's shared attention block) while keeping
+a *per-occurrence* KV cache.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerCfg, StackCfg
+from repro.dist.sharding import TensorSpec, is_spec, map_specs, tspec
+from repro.models import attention as attn_mod
+from repro.models import mamba as mamba_mod
+from repro.models.attention import (attn_cache_specs, attn_specs,
+                                    cache_len_for, cross_cache_specs)
+from repro.models.common import rmsnorm, rmsnorm_spec
+from repro.models.mlp import mlp, mlp_specs
+from repro.models.moe import moe, moe_specs
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# Per-layer specs / caches / apply
+# ---------------------------------------------------------------------------
+
+
+def layer_specs(lc: LayerCfg, d_model: int) -> dict[str, Any]:
+    if lc.kind == "shared":
+        return {}
+    if lc.kind == "attn_mlp":
+        s: dict[str, Any] = {
+            "ln1": rmsnorm_spec(d_model),
+            "attn": attn_specs(lc.attn, d_model),
+            "ln2": rmsnorm_spec(d_model),
+        }
+        if lc.attn.cross:
+            s["ln_x"] = rmsnorm_spec(d_model)
+            s["xattn"] = attn_specs(lc.attn, d_model)
+        s["ffn"] = moe_specs(lc.moe, d_model) if lc.moe else mlp_specs(lc.mlp, d_model)
+        return s
+    if lc.kind == "mamba1":
+        return {"ln": rmsnorm_spec(d_model), "ssm": mamba_mod.mamba1_specs(lc.ssm, d_model)}
+    if lc.kind == "mamba2":
+        return {"ln": rmsnorm_spec(d_model), "ssm": mamba_mod.mamba2_specs(lc.ssm, d_model)}
+    raise ValueError(lc.kind)
+
+
+def layer_cache_specs(lc: LayerCfg, shared: Optional[LayerCfg], d_model: int,
+                      batch: int, seq_len: int, enc_len: int | None,
+                      dtype=jnp.bfloat16) -> dict[str, Any]:
+    eff = shared if lc.kind == "shared" else lc
+    if eff.kind == "attn_mlp":
+        c = {"self": attn_cache_specs(eff.attn, batch,
+                                      cache_len_for(eff.attn, seq_len), dtype)}
+        if eff.attn.cross:
+            c["cross"] = cross_cache_specs(eff.attn, batch, enc_len, dtype)
+        return c
+    if eff.kind == "mamba1":
+        return {"ssm": mamba_mod.mamba1_cache_specs(eff.ssm, d_model, batch, dtype)}
+    if eff.kind == "mamba2":
+        return {"ssm": mamba_mod.mamba2_cache_specs(eff.ssm, d_model, batch, dtype)}
+    raise ValueError(eff.kind)
+
+
+def apply_layer(lc: LayerCfg, shared_cfg: Optional[LayerCfg], params, x, *,
+                mode: str, cache, aux: dict, eps: float):
+    eff = shared_cfg if lc.kind == "shared" else lc
+    new_cache: dict[str, Any] = {}
+    if eff.kind == "attn_mlp":
+        h = rmsnorm(x, params["ln1"], eps)
+        # self-attention: whisper-style cross layers use positions from aux
+        a_cfg = eff.attn
+        self_cfg = a_cfg if not a_cfg.cross else _no_cross(a_cfg)
+        a, c_self = attn_mod.attention(
+            params["attn"], h, self_cfg, positions=aux["positions"], mode=mode,
+            cache=cache.get("self") if cache else None,
+            cache_len=aux.get("cache_len"))
+        x = x + a
+        if c_self is not None:
+            new_cache["self"] = c_self
+        if a_cfg.cross:
+            h = rmsnorm(x, params["ln_x"], eps)
+            a, c_cross = attn_mod.attention(
+                params["xattn"], h, a_cfg, positions=None, mode=mode,
+                cache=cache.get("cross") if cache else None, enc_kv=aux.get("enc"))
+            x = x + a
+            if c_cross is not None:
+                new_cache["cross"] = c_cross
+        h = rmsnorm(x, params["ln2"], eps)
+        f = moe(params["ffn"], h, eff.moe) if eff.moe else mlp(params["ffn"], h, eff.mlp)
+        x = x + f
+        return x, (new_cache or None)
+    if eff.kind in ("mamba1", "mamba2"):
+        h = rmsnorm(x, params["ln"], eps)
+        fn = mamba_mod.mamba1 if eff.kind == "mamba1" else mamba_mod.mamba2
+        y, c = fn(params["ssm"], h, eff.ssm, mode=mode,
+                  cache=cache.get("ssm") if cache else None)
+        x = x + y
+        return x, ({"ssm": c} if c is not None else None)
+    raise ValueError(eff.kind)
+
+
+def _no_cross(a_cfg):
+    import dataclasses
+    return dataclasses.replace(a_cfg, cross=False)
+
+
+# ---------------------------------------------------------------------------
+# Stack-level specs
+# ---------------------------------------------------------------------------
+
+
+def _stack_tree(tree: Pytree, n: int) -> Pytree:
+    return map_specs(
+        lambda s: TensorSpec((n,) + s.shape, ("layers",) + s.axes, s.dtype,
+                             s.init, s.scale), tree)
+
+
+def stack_specs(sc: StackCfg, d_model: int) -> dict[str, Any]:
+    out: dict[str, Any] = {}
+    group = {f"p{i}": layer_specs(lc, d_model) for i, lc in enumerate(sc.pattern)}
+    group = {k: v for k, v in group.items() if v}
+    if sc.n_groups > 0 and group:
+        out["groups"] = _stack_tree(group, sc.n_groups)
+    if sc.tail:
+        out["tail"] = {f"t{i}": layer_specs(lc, d_model)
+                       for i, lc in enumerate(sc.tail)}
+        out["tail"] = {k: v for k, v in out["tail"].items() if v}
+    if sc.shared is not None:
+        out["shared"] = layer_specs(sc.shared, d_model)
+    return out
+
+
+def stack_cache_specs(sc: StackCfg, d_model: int, batch: int, seq_len: int,
+                      enc_len: int | None, dtype=jnp.bfloat16) -> dict[str, Any]:
+    out: dict[str, Any] = {}
+    group = {f"p{i}": layer_cache_specs(lc, sc.shared, d_model, batch, seq_len,
+                                        enc_len, dtype)
+             for i, lc in enumerate(sc.pattern)}
+    if sc.n_groups > 0:
+        out["groups"] = _stack_tree(group, sc.n_groups)
+    if sc.tail:
+        out["tail"] = {f"t{i}": layer_cache_specs(lc, sc.shared, d_model, batch,
+                                                  seq_len, enc_len, dtype)
+                       for i, lc in enumerate(sc.tail)}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Stack apply
+# ---------------------------------------------------------------------------
+
+
+def apply_stack(params, x, sc: StackCfg, *, mode: str, cache, aux: dict,
+                eps: float, remat: str = "none"):
+    """Returns (x, new_cache_or_None)."""
+    shared_params = params.get("shared")
+
+    def group_body(x, gp, gc):
+        new_c: dict[str, Any] = {}
+        for i, lc in enumerate(sc.pattern):
+            key = f"p{i}"
+            p = shared_params if lc.kind == "shared" else gp[key]
+            c = gc.get(key) if gc is not None else None
+            x, nc = apply_layer(lc, sc.shared, p, x, mode=mode, cache=c,
+                                aux=aux, eps=eps)
+            if nc is not None:
+                new_c[key] = nc
+        return x, new_c
+
+    if remat == "full" and mode == "train":
+        group_body = jax.checkpoint(group_body, static_argnums=())
+    elif remat == "dots" and mode == "train":
+        group_body = jax.checkpoint(
+            group_body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    new_cache: dict[str, Any] = {}
+    if sc.n_groups > 0:
+        gp_all = params["groups"]
+        gc_all = cache.get("groups") if cache is not None else None
+
+        if gc_all is not None:
+            def body(x, xs):
+                gp, gc = xs
+                return group_body(x, gp, gc)
+            x, caches = jax.lax.scan(body, x, (gp_all, gc_all))
+        else:
+            def body(x, gp):
+                return group_body(x, gp, None)
+            x, caches = jax.lax.scan(body, x, gp_all)
+        if mode in ("prefill", "decode"):
+            new_cache["groups"] = caches
+
+    for i, lc in enumerate(sc.tail):
+        key = f"t{i}"
+        p = shared_params if lc.kind == "shared" else params["tail"][key]
+        c = (cache.get("tail", {}) or {}).get(key) if cache is not None else None
+        x, nc = apply_layer(lc, sc.shared, p, x, mode=mode, cache=c, aux=aux,
+                            eps=eps)
+        if nc is not None:
+            new_cache.setdefault("tail", {})[key] = nc
+
+    return x, (new_cache if mode in ("prefill", "decode") else None)

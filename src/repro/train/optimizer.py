@@ -1,0 +1,84 @@
+"""AdamW + global-norm clipping + LR schedules, built from scratch (no optax).
+
+Optimizer state dtype is configurable: fp32 (default) or bf16 moments —
+the bf16 option halves optimizer HBM (a §Perf memory-term lever for
+arctic-480b / qwen2-vl-72b scale).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptCfg:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+    state_dtype: Any = jnp.float32     # bf16 halves optimizer memory
+
+
+def lr_at(cfg: OptCfg, step):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = cfg.lr * (step + 1) / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.lr * (cfg.min_lr_frac + (1 - cfg.min_lr_frac)
+                    * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params, cfg: OptCfg):
+    z = lambda p: jnp.zeros(p.shape, cfg.state_dtype)
+    return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, opt_state, cfg: OptCfg):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"]
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    lr = lr_at(cfg, step)
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1 - cfg.b1 ** t
+    bc2 = 1 - cfg.b2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * cfg.b1 + (1 - cfg.b1) * g
+        v32 = v.astype(jnp.float32) * cfg.b2 + (1 - cfg.b2) * g * g
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        step_ = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        # decoupled weight decay on matrices only (ndim >= 2)
+        wd = cfg.weight_decay if p.ndim >= 2 else 0.0
+        p32 = p32 - lr * (step_ + wd * p32)
+        return (p32.astype(p.dtype), m32.astype(cfg.state_dtype),
+                v32.astype(cfg.state_dtype))
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(opt_state["m"])
+    flat_v = tdef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, {"m": new_m, "v": new_v, "step": step + 1}, metrics

@@ -1,0 +1,169 @@
+"""Step builders: train_step / prefill_step / decode_step.
+
+These are the functions the launcher jits (and the dry-run lowers).  Sharding
+is injected two ways: (a) in_shardings/out_shardings computed from TensorSpec
+trees, (b) internal with_sharding_constraint via the sharding_ctx installed
+around tracing (see dist/sharding.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelCfg, ShapeCfg
+from repro.dist.sharding import (TensorSpec, init_params, map_specs,
+                                 sharding_ctx, tspec)
+from repro.models import model as model_mod
+from repro.models.losses import chunked_xent, xent
+from repro.models.model import decode_positions, forward, model_cache_specs, model_specs
+from repro.train.optimizer import OptCfg, adamw_update, init_opt_state
+
+
+@dataclasses.dataclass(frozen=True)
+class StepCfg:
+    remat: str = "full"              # 'none' | 'full' | 'dots'
+    loss: str = "plain"              # 'plain' | 'chunked'
+    loss_chunks: int = 8
+    donate_cache: bool = True
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins — the dry-run contract)
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(cfg: ModelCfg, shape: ShapeCfg) -> dict[str, Any]:
+    """TensorSpec tree for every model input of (arch x shape)."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        specs: dict[str, Any] = {}
+        if cfg.embed_inputs:
+            specs["tokens"] = tspec((b, s), ("batch", "seq"), jnp.int32)
+        else:  # vlm stub: precomputed patch/frame embeddings
+            specs["inputs"] = tspec((b, s, cfg.d_model), ("batch", "seq", "act_embed"),
+                                    jnp.bfloat16)
+        if cfg.encoder is not None:  # whisper: frame embeddings + text tokens
+            specs["tokens"] = tspec((b, s), ("batch", "seq"), jnp.int32)
+            specs["enc_inputs"] = tspec((b, s, cfg.d_model),
+                                        ("batch", "seq", "act_embed"), jnp.bfloat16)
+        specs["labels"] = tspec((b, s), ("batch", "seq"), jnp.int32)
+        return specs
+    if shape.kind == "prefill":
+        specs = {}
+        if cfg.embed_inputs:
+            specs["tokens"] = tspec((b, s), ("batch", "seq"), jnp.int32)
+        else:
+            specs["inputs"] = tspec((b, s, cfg.d_model), ("batch", "seq", "act_embed"),
+                                    jnp.bfloat16)
+        if cfg.encoder is not None:
+            specs["tokens"] = tspec((b, s), ("batch", "seq"), jnp.int32)
+            specs["enc_inputs"] = tspec((b, s, cfg.d_model),
+                                        ("batch", "seq", "act_embed"), jnp.bfloat16)
+        return specs
+    if shape.kind == "decode":
+        return {"tokens": tspec((b,), ("batch",), jnp.int32),
+                "pos": tspec((), (), jnp.int32)}
+    raise ValueError(shape.kind)
+
+
+def cache_specs_for(cfg: ModelCfg, shape: ShapeCfg) -> dict[str, Any]:
+    assert shape.kind == "decode"
+    return model_cache_specs(cfg, shape.global_batch, shape.seq_len,
+                             enc_len=min(shape.seq_len, 32768))
+
+
+def train_state_specs(cfg: ModelCfg, opt: OptCfg) -> dict[str, Any]:
+    p = model_specs(cfg)
+    zero = lambda s: TensorSpec(s.shape, s.axes, opt.state_dtype, "zeros")
+    return {"params": p,
+            "m": map_specs(zero, p),
+            "v": map_specs(zero, p),
+            "step": tspec((), (), jnp.int32, init="zeros")}
+
+
+def init_train_state(cfg: ModelCfg, opt: OptCfg, key):
+    params = init_params(model_specs(cfg), key)
+    st = init_opt_state(params, opt)
+    return {"params": params, "m": st["m"], "v": st["v"], "step": st["step"]}
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelCfg, opt: OptCfg, step_cfg: StepCfg = StepCfg(),
+                    mesh=None, rules=None):
+    def train_step(state, batch):
+        with sharding_ctx(mesh, rules) if mesh is not None else _null():
+            def loss_fn(params):
+                inputs = batch.get("tokens") if cfg.embed_inputs else batch["inputs"]
+                kw = {}
+                if cfg.encoder is not None:
+                    kw["enc_inputs"] = batch["enc_inputs"]
+                    inputs = batch["tokens"]
+                if step_cfg.loss == "chunked":
+                    hidden = forward(params, cfg, inputs, mode="train",
+                                     remat=step_cfg.remat, return_hidden=True,
+                                     **kw)
+                    head = model_mod.lm_head(params, cfg).astype(hidden.dtype)
+                    return chunked_xent(hidden, head, batch["labels"],
+                                        step_cfg.loss_chunks)
+                logits = forward(params, cfg, inputs, mode="train",
+                                 remat=step_cfg.remat, **kw)
+                return xent(logits, batch["labels"])
+
+            loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+            new_p, new_opt, metrics = adamw_update(
+                state["params"], grads,
+                {"m": state["m"], "v": state["v"], "step": state["step"]}, opt)
+            metrics["loss"] = loss
+            new_state = {"params": new_p, "m": new_opt["m"], "v": new_opt["v"],
+                         "step": new_opt["step"]}
+            return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelCfg, step_cfg: StepCfg = StepCfg(),
+                      mesh=None, rules=None, max_len: int | None = None):
+    """max_len: KV-cache capacity for subsequent decode steps (defaults to
+    the prompt length — pass prompt+generation budget when serving)."""
+    def prefill_step(params, batch):
+        with sharding_ctx(mesh, rules) if mesh is not None else _null():
+            inputs = batch.get("tokens") if cfg.embed_inputs else batch["inputs"]
+            kw = {}
+            if cfg.encoder is not None:
+                kw["enc_inputs"] = batch["enc_inputs"]
+                inputs = batch["tokens"]
+            logits, cache = forward(params, cfg, inputs, mode="prefill",
+                                    cache_len=max_len, **kw)
+            return logits[:, -1], cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelCfg, step_cfg: StepCfg = StepCfg(),
+                     mesh=None, rules=None):
+    from repro.models.model import _mrope
+
+    def decode_step(params, cache, batch):
+        with sharding_ctx(mesh, rules) if mesh is not None else _null():
+            tokens = batch["tokens"][:, None]                 # (B,1)
+            pos = decode_positions(batch["pos"], tokens.shape[0], _mrope(cfg))
+            logits, cache = forward(params, cfg, tokens, mode="decode",
+                                    cache=cache, positions=pos)
+            return logits[:, 0], cache
+
+    return decode_step
+
+
+import contextlib
+
+
+@contextlib.contextmanager
+def _null():
+    yield

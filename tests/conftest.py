@@ -1,0 +1,46 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see the real single
+CPU device (the 512-device override belongs to launch/dryrun.py only)."""
+import numpy as np
+import pytest
+
+from repro.core import schema as sc
+from repro.core import upload as up
+from repro.core.parse import format_rows
+
+ROWS = 1024
+BLOCKS = 4
+PART = 128
+
+
+@pytest.fixture(scope="session")
+def uservisits_raw():
+    cols = sc.gen_uservisits(ROWS * BLOCKS, seed=7)
+    raw = format_rows(sc.USERVISITS, cols, bad_fraction=0.002)
+    return cols, raw.reshape(BLOCKS, ROWS, -1)
+
+
+@pytest.fixture(scope="session")
+def hail_store(uservisits_raw):
+    _, raw = uservisits_raw
+    store, stats = up.hail_upload(
+        sc.USERVISITS, raw, ["visitDate", "sourceIP", "adRevenue"],
+        partition_size=PART, n_nodes=6)
+    return store
+
+
+@pytest.fixture(scope="session")
+def hdfs_store(uservisits_raw):
+    _, raw = uservisits_raw
+    store, _ = up.hdfs_upload(sc.USERVISITS, raw, replication=3, n_nodes=6)
+    return store
+
+
+@pytest.fixture(scope="session")
+def oracle_rows(uservisits_raw):
+    """Ground truth rows excluding bad (corrupted) records."""
+    import jax
+    from repro.core.parse import parse_block
+    cols, raw = uservisits_raw
+    bad = np.asarray(jax.jit(jax.vmap(
+        lambda r: parse_block(sc.USERVISITS, r)[1]))(raw)).reshape(-1)
+    return cols, bad

@@ -1,0 +1,110 @@
+"""Per-arch smoke tests on REDUCED configs (assignment requirement): one
+forward/train step on CPU asserting output shapes + no NaNs, plus
+prefill->decode consistency (teacher-forced decode matches full forward)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_reduced
+from repro.models.model import forward, model_specs
+from repro.dist.sharding import init_params, param_count
+from repro.train.optimizer import OptCfg
+from repro.train.step import (init_train_state, make_decode_step,
+                              make_prefill_step, make_train_step)
+
+KEY = jax.random.PRNGKey(0)
+B, T = 2, 16
+
+
+def _batch(cfg):
+    b = {}
+    if cfg.embed_inputs:
+        b["tokens"] = jax.random.randint(KEY, (B, T), 0, cfg.vocab)
+    else:
+        b["inputs"] = jax.random.normal(KEY, (B, T, cfg.d_model), jnp.bfloat16)
+    if cfg.encoder is not None:
+        b["tokens"] = jax.random.randint(KEY, (B, T), 0, cfg.vocab)
+        b["enc_inputs"] = jax.random.normal(KEY, (B, T, cfg.d_model),
+                                            jnp.bfloat16)
+    b["labels"] = jax.random.randint(KEY, (B, T), 0, cfg.vocab)
+    return b
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_train_step(arch):
+    cfg = get_reduced(arch)
+    state = init_train_state(cfg, OptCfg(), KEY)
+    step = jax.jit(make_train_step(cfg, OptCfg()))
+    new_state, metrics = step(state, _batch(cfg))
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss) and 1.0 < loss < 20.0
+    assert int(new_state["step"]) == 1
+    # params actually changed (vlm stub: embed table gets no gradient, so
+    # check across all leaves, not just the first)
+    changed = any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(state["params"]),
+                        jax.tree.leaves(new_state["params"])))
+    assert changed
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_prefill_decode_consistency(arch):
+    """decode(pos=T | prefill(x[:T])) must match forward(x[:T+1])[-1]."""
+    cfg = get_reduced(arch)
+    params = init_params(model_specs(cfg), KEY)
+    params = jax.tree.map(
+        lambda x: x.astype(jnp.bfloat16)
+        if jnp.issubdtype(x.dtype, jnp.floating) else x, params)
+    tokens = jax.random.randint(KEY, (B, T + 1), 0, cfg.vocab)
+    kw = {}
+    b_pref = {}
+    if cfg.embed_inputs:
+        b_pref["tokens"] = tokens[:, :T]
+        full_in = tokens
+    else:
+        emb = params["embed"].astype(jnp.bfloat16)[tokens]
+        b_pref["inputs"] = emb[:, :T]
+        full_in = emb
+    if cfg.encoder is not None:
+        enc = jax.random.normal(KEY, (B, T, cfg.d_model), jnp.bfloat16)
+        b_pref["enc_inputs"] = enc
+        kw["enc_inputs"] = enc
+    # reference: full forward over T+1 tokens
+    ref_logits = forward(params, cfg, full_in, mode="train", **kw)
+    # prefill T (with decode headroom in the cache) then decode token T
+    pf = jax.jit(make_prefill_step(cfg, max_len=T + 8))
+    dc = jax.jit(make_decode_step(cfg))
+    _, cache = pf(params, b_pref)
+    got, _ = dc(params, cache, {"tokens": tokens[:, T],
+                                "pos": jnp.asarray(T, jnp.int32)})
+    a = np.asarray(ref_logits[:, T], np.float32)
+    g = np.asarray(got, np.float32)
+    # bf16 two-path tolerance
+    np.testing.assert_allclose(g, a, atol=0.15, rtol=0.05)
+    # and the argmax ranking agrees for nearly all rows
+    agree = (a.argmax(-1) == g.argmax(-1)).mean()
+    assert agree >= 0.9, f"argmax agreement {agree}"
+
+
+def test_param_counts_match_published_scale():
+    """Full configs land in the right parameter-count ballpark."""
+    expect = {
+        "llama3.2-1b": (1.0e9, 1.9e9),
+        "gemma3-4b": (3.0e9, 5.0e9),
+        "gemma3-12b": (10e9, 14e9),
+        "h2o-danube-1.8b": (1.4e9, 2.2e9),
+        "falcon-mamba-7b": (6.5e9, 8.5e9),
+        "mixtral-8x22b": (120e9, 150e9),
+        "arctic-480b": (430e9, 530e9),
+        # our zamba2 reading (single shared block, no LoRA adapters) lands
+        # at 1.98B — see DESIGN.md config notes
+        "zamba2-2.7b": (1.8e9, 3.4e9),
+        "whisper-medium": (0.6e9, 0.9e9),   # whisper-medium is 769M
+        "qwen2-vl-72b": (65e9, 80e9),
+    }
+    from repro.configs import get_config
+    for arch, (lo, hi) in expect.items():
+        n = param_count(model_specs(get_config(arch)))
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B params not in [{lo/1e9},{hi/1e9}]B"

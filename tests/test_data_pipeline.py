@@ -1,0 +1,41 @@
+"""HailDataSource: indexed training-data selection feeding token batches."""
+import numpy as np
+import pytest
+
+from repro.data.pipeline import CorpusConfig, HailDataSource, build_corpus
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    cfg = CorpusConfig(n_docs=512, seq_width=32, rows_per_block=128,
+                       partition_size=32, n_domains=8)
+    store, stats = build_corpus(cfg, seed=5)
+    return cfg, store
+
+
+def test_selection_uses_index_and_filters(corpus):
+    cfg, store = corpus
+    src = HailDataSource(store, cfg, select=("domain", 3, 3), batch_size=4)
+    assert src.used_index
+    assert 0 < src.n_selected < 512
+    # roughly 1/8 of docs
+    assert abs(src.n_selected - 512 / 8) < 40
+
+
+def test_batches_have_training_shape(corpus):
+    cfg, store = corpus
+    src = HailDataSource(store, cfg, select=("quality", 500, 1000),
+                         batch_size=4)
+    it = iter(src)
+    b = next(it)
+    assert b["tokens"].shape == (4, cfg.seq_width - 1)
+    assert b["labels"].shape == (4, cfg.seq_width - 1)
+    # labels are tokens shifted by one
+    np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                  np.asarray(b["labels"][:, :-1]))
+
+
+def test_unfiltered_selects_everything(corpus):
+    cfg, store = corpus
+    src = HailDataSource(store, cfg, select=None, batch_size=2)
+    assert src.n_selected == 512

@@ -1,0 +1,257 @@
+"""HAIL core behaviour: parsing, checksums, indexes, the scan-equivalence
+invariant, replica failover, namenode metadata, splitting, MR jobs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import checksum as ck
+from repro.core import index as idx
+from repro.core import mapreduce as mr
+from repro.core import query as q
+from repro.core import schema as sc
+from repro.core import splitting as sp
+from repro.core import upload as up
+from repro.core.parse import format_rows, parse_block
+from repro.core.schema import ROWID
+
+from conftest import BLOCKS, PART, ROWS
+
+
+# ---------------------------------------------------------------------------
+# Parser
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 2**31 - 1), min_size=4, max_size=4),
+       st.lists(st.integers(0, 99999), min_size=4, max_size=4))
+def test_parser_roundtrip(a, b):
+    schema = sc.Schema("t", (sc.Column("x"), sc.Column("y", ascii_width=5)))
+    cols = {"x": np.array(a, np.int64), "y": np.array(b, np.int64)}
+    raw = format_rows(schema, cols)
+    got, bad = parse_block(schema, jnp.asarray(raw))
+    assert not bool(bad.any())
+    np.testing.assert_array_equal(np.asarray(got["x"]), np.array(a, np.int32))
+    np.testing.assert_array_equal(np.asarray(got["y"]), np.array(b, np.int32))
+
+
+def test_parser_flags_bad_records():
+    schema = sc.Schema("t", (sc.Column("x", ascii_width=4),))
+    raw = format_rows(schema, {"x": np.arange(8)})
+    raw[3, 1] = ord("z")
+    _, bad = parse_block(schema, jnp.asarray(raw))
+    assert np.asarray(bad).tolist() == [False, False, False, True,
+                                        False, False, False, False]
+
+
+# ---------------------------------------------------------------------------
+# Checksums
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(0, 511))
+def test_checksum_detects_mutation(seed, pos):
+    r = np.random.default_rng(seed)
+    data = jnp.asarray(r.integers(0, 255, 2048, dtype=np.int32))
+    sums = ck.chunk_checksums(data)
+    corrupted = data.at[pos].add(1)
+    assert not bool(ck.verify(corrupted, sums).all())
+    assert bool(ck.verify(data, sums).all())
+
+
+def test_checksum_detects_permutation():
+    data = jnp.arange(512, dtype=jnp.int32)
+    sums = ck.chunk_checksums(data)
+    assert not bool(ck.verify(data[::-1], sums).all())
+
+
+def test_per_replica_checksums_differ(hail_store):
+    a = hail_store.replicas[0].checksums["sourceIP"]
+    b = hail_store.replicas[1].checksums["sourceIP"]
+    assert not bool((a == b).all())   # different sort orders -> different sums
+
+
+# ---------------------------------------------------------------------------
+# Clustered index
+# ---------------------------------------------------------------------------
+
+
+def test_partition_mins_sorted(hail_store):
+    for rep in hail_store.replicas:
+        mins = np.asarray(rep.mins)
+        assert (np.diff(mins, axis=1) >= 0).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**20), st.integers(0, 2**20), st.integers(0, 2**31 - 1))
+def test_index_scan_equals_full_scan(lo, hi, seed):
+    lo, hi = min(lo, hi), max(lo, hi)
+    r = np.random.default_rng(seed)
+    keys = jnp.asarray(np.sort(r.integers(0, 2**20, 1024).astype(np.int32)))
+    mins = idx.build_root(keys, 128)
+    got = idx.index_scan_mask(keys, mins, lo, hi, 128)
+    want = idx.full_scan_mask(keys, lo, hi)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_rows_read_fraction_selective():
+    keys = jnp.arange(1024, dtype=jnp.int32)
+    mins = idx.build_root(keys, 128)
+    frac = idx.rows_read_fraction(mins, 0, 10, 128, 1024)
+    assert float(frac) == pytest.approx(128 / 1024)
+
+
+# ---------------------------------------------------------------------------
+# The system invariant: HAIL index scan == HAIL full scan == Hadoop scan
+# ---------------------------------------------------------------------------
+
+Q1 = q.HailQuery(filter=("visitDate", 7305, 7670), projection=("sourceIP",))
+
+
+def _sorted_result(res):
+    rows = q.collect(res)
+    order = np.argsort(rows[ROWID])
+    return {k: v[order] for k, v in rows.items()}
+
+
+def test_scan_equivalence(hail_store, hdfs_store, oracle_rows):
+    cols, bad = oracle_rows
+    m = (cols["visitDate"] >= 7305) & (cols["visitDate"] <= 7670) & ~bad
+    qp = q.plan(hail_store, Q1)
+    assert qp.index_scan.all()
+    hail = _sorted_result(q.read_hail(hail_store, Q1, qp))
+    hadoop = _sorted_result(q.read_hadoop(hdfs_store, Q1))
+    np.testing.assert_array_equal(hail["sourceIP"], cols["sourceIP"][m])
+    np.testing.assert_array_equal(hadoop["sourceIP"], cols["sourceIP"][m])
+    np.testing.assert_array_equal(hail[ROWID], hadoop[ROWID])
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from(["sourceIP", "visitDate", "adRevenue", "duration"]),
+       st.integers(0, 2**30), st.integers(0, 2**30))
+def test_query_equivalence_property(hail_store, hdfs_store, oracle_rows,
+                                    col, lo, hi):
+    """For any filter column (indexed or not) and any range, HAIL == Hadoop."""
+    lo, hi = min(lo, hi), max(lo, hi)
+    cols, bad = oracle_rows
+    query = q.HailQuery(filter=(col, lo, hi), projection=("duration",))
+    qp = q.plan(hail_store, query)
+    hail = _sorted_result(q.read_hail(hail_store, query, qp))
+    m = (cols[col] >= lo) & (cols[col] <= hi) & ~bad
+    np.testing.assert_array_equal(hail["duration"], cols["duration"][m])
+
+
+def test_replica_equivalence(hail_store, oracle_rows):
+    """Any replica reconstructs the same logical rows (failover invariant)."""
+    cols, bad = oracle_rows
+    query = q.HailQuery(filter=("duration", 100, 5000), projection=("destURL",))
+    results = []
+    for rid in range(hail_store.replication):
+        qp = q.plan(hail_store, query)
+        qp.replica_for_block[:] = rid
+        qp.index_scan[:] = hail_store.replicas[rid].sort_key == "duration"
+        results.append(_sorted_result(q.read_hail(hail_store, query, qp)))
+    for r2 in results[1:]:
+        np.testing.assert_array_equal(results[0][ROWID], r2[ROWID])
+        np.testing.assert_array_equal(results[0]["destURL"], r2["destURL"])
+
+
+def test_bad_records_excluded_and_counted(hail_store, oracle_rows):
+    _, bad = oracle_rows
+    assert int(hail_store.bad_counts.sum()) == int(bad.sum()) > 0
+
+
+# ---------------------------------------------------------------------------
+# Namenode / planning / failover
+# ---------------------------------------------------------------------------
+
+
+def test_namenode_metadata(hail_store):
+    nn = hail_store.namenode
+    assert len(nn.dir_block) == BLOCKS
+    infos = nn.replicas(0)
+    assert {i.sort_key for i in infos} == {"visitDate", "sourceIP", "adRevenue"}
+    hosts = nn.get_hosts_with_index(0, "sourceIP")
+    assert len(hosts) == 1
+
+
+def test_plan_prefers_matching_index(hail_store):
+    qp = q.plan(hail_store, q.HailQuery(filter=("sourceIP", 0, 100),
+                                        projection=("duration",)))
+    want = hail_store.replica_by_key("sourceIP")
+    assert (qp.replica_for_block == want).all()
+    assert qp.index_scan.all()
+
+
+def test_failover_falls_back_to_scan(hail_store, oracle_rows):
+    cols, bad = oracle_rows
+    nn = hail_store.namenode
+    victim = int(hail_store.replicas[
+        hail_store.replica_by_key("visitDate")].nodes[0])
+    nn.kill_node(victim)
+    try:
+        qp = q.plan(hail_store, Q1)
+        assert not qp.index_scan.all()          # some blocks lost their index
+        res = _sorted_result(q.read_hail(hail_store, Q1, qp))
+        m = (cols["visitDate"] >= 7305) & (cols["visitDate"] <= 7670) & ~bad
+        np.testing.assert_array_equal(res["sourceIP"], cols["sourceIP"][m])
+    finally:
+        nn.revive()
+
+
+def test_all_replicas_lost_raises(hail_store):
+    nn = hail_store.namenode
+    for node in range(6):
+        nn.kill_node(node)
+    with pytest.raises(RuntimeError):
+        q.plan(hail_store, Q1)
+    nn.revive()
+
+
+# ---------------------------------------------------------------------------
+# Splitting + jobs
+# ---------------------------------------------------------------------------
+
+
+def test_hail_splitting_coalesces(hail_store):
+    qp = q.plan(hail_store, Q1)
+    hs = sp.hail_splits(hail_store, qp, map_slots=2)
+    ds = sp.hadoop_splits(hail_store, qp)
+    assert len(hs) <= len(ds)
+    assert sorted(b for s in hs for b in s.block_ids) == list(range(BLOCKS))
+    for s in hs:   # locality: every block in a split reads from its node
+        for b in s.block_ids:
+            assert qp.nodes[b] == s.node
+
+
+def test_job_results_match_across_policies(hail_store, hdfs_store):
+    r1 = mr.run_job(hail_store, Q1, splitting="hail")
+    r2 = mr.run_job(hail_store, Q1, splitting="hadoop")
+    r3 = mr.run_job(hdfs_store, Q1)
+    assert r1.results["n_rows"] == r2.results["n_rows"] == r3.results["n_rows"]
+    assert r1.n_tasks <= r2.n_tasks
+
+
+def test_job_failover_preserves_results(hail_store):
+    base = mr.run_job(hail_store, Q1, splitting="hail")
+    failed = mr.run_job(hail_store, Q1, splitting="hail", fail_node_at=0.5)
+    assert failed.results["n_rows"] == base.results["n_rows"]
+
+
+def test_spmd_groupby_oracle(hail_store, oracle_rows):
+    from repro.launch.mesh import make_mesh
+    cols, bad = oracle_rows
+    mesh = make_mesh((1,), ("data",))
+    qp = q.plan(hail_store, Q1)
+    res = q.read_hail(hail_store, Q1, qp)
+    rep = hail_store.replicas[int(qp.replica_for_block[0])]
+    sums, cnts = mr.spmd_aggregate(mesh, rep.cols["countryCode"],
+                                   rep.cols["adRevenue"], res.mask,
+                                   n_buckets=256)
+    m = (cols["visitDate"] >= 7305) & (cols["visitDate"] <= 7670) & ~bad
+    want = np.zeros(256)
+    np.add.at(want, cols["countryCode"][m] % 256, cols["adRevenue"][m])
+    np.testing.assert_allclose(np.asarray(sums), want, rtol=1e-6)

@@ -1,0 +1,114 @@
+"""HLO analyzer: validated against XLA's own cost_analysis on scan-free
+programs; trip-count multiplication validated on scanned programs; collective
+accounting validated on a synthetic HLO fixture."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_analysis as ha
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile()
+
+
+def test_dot_flops_match_cost_analysis():
+    a = jnp.zeros((256, 512), jnp.float32)
+    b = jnp.zeros((512, 128), jnp.float32)
+    comp = _compile(lambda x, y: x @ y, a, b)
+    got = ha.analyze_hlo_text(comp.as_text())
+    want = comp.cost_analysis()["flops"]
+    assert got["dot_flops"] == pytest.approx(want, rel=0.01)
+    assert got["dot_flops"] == 2 * 256 * 512 * 128
+
+
+def test_scan_trip_count_correction():
+    """XLA counts a scan body once; the analyzer multiplies by trip count."""
+    L = 8
+    w = jnp.zeros((L, 64, 64), jnp.float32)
+
+    def f(x, w):
+        def body(x, wi):
+            return x @ wi, None
+        x, _ = jax.lax.scan(body, x, w)
+        return x
+
+    x = jnp.zeros((32, 64), jnp.float32)
+    comp = _compile(f, x, w)
+    got = ha.analyze_hlo_text(comp.as_text())
+    xla = comp.cost_analysis()["flops"]
+    per_layer = 2 * 32 * 64 * 64
+    assert got["dot_flops"] == pytest.approx(L * per_layer, rel=0.01)
+    # sanity: XLA indeed undercounts (body counted ~once)
+    assert xla < got["dot_flops"]
+
+
+def test_elementwise_flops_counted():
+    x = jnp.zeros((1000,), jnp.float32)
+    comp = _compile(lambda x: jnp.tanh(x) + x * 2.0, x)
+    got = ha.analyze_hlo_text(comp.as_text())
+    assert got["flops"] >= 1000  # at least one op over 1000 elems survived fusion
+
+
+SYNTH = """
+HloModule synth
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%body (p: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+  %p = (s32[], f32[128,256]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[128,256]{1,0} get-tuple-element(%p), index=1
+  %ar = f32[128,256]{1,0} all-reduce(%x), replica_groups=[4,8]<=[32], to_apply=%add
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[128,256]) tuple(%ni, %ar)
+}
+
+%cond (p: (s32[], f32[128,256])) -> pred[] {
+  %p = (s32[], f32[128,256]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(6)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (x: f32[128,256]) -> f32[128,256] {
+  %x = f32[128,256]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %t0 = (s32[], f32[128,256]) tuple(%zero, %x)
+  %w = (s32[], f32[128,256]) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"6"}}
+  %ag = f32[256,256]{1,0} all-gather(%x), replica_groups=[16,2]<=[32], dimensions={0}
+  %cp = f32[128,256]{1,0} collective-permute(%x), source_target_pairs={{0,1},{1,0}}
+  ROOT %out = f32[128,256]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_synthetic_collectives_and_trip_counts():
+    got = ha.analyze_hlo_text(SYNTH)
+    payload = 128 * 256 * 4
+    # all-reduce inside while x6, group size 8
+    assert got["coll_bytes"]["all-reduce"] == 6 * payload
+    assert got["coll_count"]["all-reduce"] == 6
+    # all-gather once: payload = max(out, in) = 256*256*4, group 2
+    ag_payload = 256 * 256 * 4
+    assert got["coll_bytes"]["all-gather"] == ag_payload
+    assert got["coll_bytes"]["collective-permute"] == payload
+    want_link = (6 * 2 * payload * 7 / 8) + ag_payload * 1 / 2 + payload
+    assert got["coll_link_bytes"] == pytest.approx(want_link)
+
+
+def test_roofline_terms_and_dominance():
+    hw = {"peak_bf16_flops": 1e12, "hbm_bw": 1e9, "ici_bw": 1e9}
+    costs = {"flops": 1e12, "hbm_bytes": 5e9, "coll_link_bytes": 1e9}
+    terms = ha.roofline_terms(costs, hw)
+    assert terms["compute_s"] == 1.0
+    assert terms["memory_s"] == 5.0
+    assert terms["collective_s"] == 1.0
+    assert terms["dominant"] == "memory"
+    assert terms["step_lower_bound_s"] == 5.0

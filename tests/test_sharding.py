@@ -1,0 +1,78 @@
+"""Logical-axis resolver: rule priorities, divisibility fallbacks, compound
+axes, per-tensor uniqueness — against fake production-shaped meshes."""
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import (DEFAULT_RULES, TensorSpec, param_bytes,
+                                 param_count, resolve_pspec, tspec)
+
+
+@dataclasses.dataclass
+class FakeMesh:
+    axis_names: tuple
+    devices: np.ndarray
+
+
+SINGLE = FakeMesh(("data", "model"), np.zeros((16, 16)))
+MULTI = FakeMesh(("pod", "data", "model"), np.zeros((2, 16, 16)))
+
+
+def test_batch_uses_pod_and_data_on_multipod():
+    ps = resolve_pspec((256, 4096), ("batch", "seq"), MULTI)
+    assert ps == P(("pod", "data"))
+    ps = resolve_pspec((256, 4096), ("batch", "seq"), SINGLE)
+    assert ps == P("data")
+
+
+def test_compound_prefix_fallback():
+    # batch=2 divides 'pod' (2) but not pod*data (32) -> prefix ('pod',)
+    ps = resolve_pspec((2, 128), ("batch", "seq"), MULTI)
+    assert ps == P("pod")
+
+
+def test_divisibility_drops_axis():
+    # kv_heads=8 does not divide model=16 -> replicated
+    ps = resolve_pspec((1024, 8, 128), ("embed", "kv_heads", "head_dim"), SINGLE)
+    assert ps == P("data")
+
+
+def test_kv_seq_falls_to_model_when_data_taken():
+    # cache (B, S, KV, D): batch takes data, kv_seq falls to model
+    ps = resolve_pspec((128, 32768, 8, 256),
+                       ("batch", "kv_seq", "act_kv_heads", "head_dim"), SINGLE)
+    assert ps == P("data", "model")
+
+
+def test_batch_one_long_context():
+    # batch=1 unshardable; kv_seq gets data
+    ps = resolve_pspec((1, 524288, 8, 256),
+                       ("batch", "kv_seq", "act_kv_heads", "head_dim"), SINGLE)
+    assert ps == P(None, "data")
+
+
+def test_axis_used_once_per_tensor():
+    # vocab and embed both want axes; embed->data, vocab->model, no reuse
+    ps = resolve_pspec((262144, 2560), ("vocab", "embed"), SINGLE)
+    assert ps == P("model", "data")
+
+
+def test_expert_sharding():
+    # experts take 'model'; the FFN dim then finds it used and replicates
+    ps = resolve_pspec((128, 7168, 4864),
+                       ("expert", "embed", "expert_mlp"), SINGLE)
+    assert ps == P("model", "data")
+    # 8 experts don't divide 16 -> the FFN dim falls back to 'model'
+    # (the confirmed §Perf fix for mixtral: no replicated expert compute)
+    ps = resolve_pspec((8, 6144, 16384),
+                       ("expert", "embed", "expert_mlp"), SINGLE)
+    assert ps == P(None, "data", "model")
+
+
+def test_param_accounting():
+    spec = {"a": tspec((4, 8), ("embed", "mlp")),
+            "b": tspec((8,), ("act_embed",), jnp.bfloat16)}
+    assert param_count(spec) == 40
+    assert param_bytes(spec) == 4 * 8 * 4 + 8 * 2
