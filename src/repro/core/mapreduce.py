@@ -6,14 +6,22 @@ Two executors:
   jit dispatch per split (HailSplitting batches many blocks per dispatch);
   per-task overheads accounted explicitly (measured dispatch + configurable
   simulated scheduler constant, the paper's multi-second Hadoop overhead).
-  Node-failure injection re-schedules a failed node's splits onto surviving
-  replicas, falling back to full scan when the lost replica held the only
-  matching index (paper Fig 8).
+  Execution is ASYNC: all splits are dispatched up front (jax's async
+  dispatch queues them) and a single completion pass blocks per result —
+  split execution pipelines instead of serializing, with per-split timing
+  preserved via dispatch/completion timestamps (``JobStats.split_s``).
+  ``reader="kernels"`` routes pax splits through the fused one-dispatch
+  ``read_hail_kernels`` Pallas reader.  Node-failure injection re-schedules
+  a failed node's splits onto surviving replicas, falling back to full scan
+  when the lost replica held the only matching index (paper Fig 8).
 
 * ``spmd_aggregate`` — shard_map engine for cluster-wide aggregations:
   map+combine per device over the block-sharded store, hash-bucket shuffle
   via all_to_all, segment-sum reduce.  Degenerates gracefully on 1 device;
   lowerable on the 512-device production mesh (see tests).
+
+Simulated-cluster constants and the dispatch-count model are documented in
+EXPERIMENTS.md.
 """
 from __future__ import annotations
 
@@ -33,13 +41,17 @@ from repro.core.store import BlockStore
 @dataclasses.dataclass
 class JobStats:
     n_tasks: int
-    map_compute_s: float
+    map_compute_s: float       # dispatch-to-last-completion wall (pipelined)
     overhead_s: float          # dispatch + simulated scheduling
     bytes_read: int
     end_to_end_s: float        # compute + overhead (simulated cluster walltime)
     record_reader_s: float
     results: dict
     rescheduled_tasks: int = 0
+    split_s: list = dataclasses.field(default_factory=list)
+    # ^ per split: completion timestamp - its dispatch timestamp (includes
+    #   queue wait behind earlier splits; the pipelining win shows as
+    #   map_compute_s << sum(split_s))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,8 +67,14 @@ class ClusterModel:
 def run_job(store: BlockStore, query: q.HailQuery, *,
             splitting: str = "hail", cluster: ClusterModel = ClusterModel(),
             reduce_fn: Optional[Callable] = None,
-            fail_node_at: Optional[float] = None) -> JobStats:
-    """Execute filter/project (+optional reduce) over all blocks."""
+            fail_node_at: Optional[float] = None,
+            reader: str = "jnp") -> JobStats:
+    """Execute filter/project (+optional reduce) over all blocks.
+
+    reader: 'jnp' (batched jnp record reader) or 'kernels' (fused Pallas
+    split reader — one pallas_call dispatch per split; interpret mode on
+    CPU, so 'jnp' stays the container default).
+    """
     qplan = q.plan(store, query)
     if store.layout != "pax":
         splits = hadoop_splits(store, qplan)
@@ -65,21 +83,32 @@ def run_job(store: BlockStore, query: q.HailQuery, *,
     else:
         splits = hadoop_splits(store, qplan)
 
-    n_tasks = len(splits)
     fail_after = (int(len(splits) * fail_node_at)
                   if fail_node_at is not None else None)
     failed_node = None
     rescheduled = 0
 
-    compute_s = 0.0
-    bytes_read = 0
-    masks, cols = [], []
+    def read_split(sp: Split):
+        if store.layout != "pax":
+            return q.read_hadoop(store, query, list(sp.block_ids))
+        if reader == "kernels" and query.filter is not None:
+            return q.read_hail_kernels(store, query, qplan,
+                                       list(sp.block_ids))
+        return q.read_hail(store, query, qplan, list(sp.block_ids))
+
+    # --- dispatch phase: queue every split's read without blocking --------
+    # (jax dispatches asynchronously; the per-split reads pipeline instead
+    # of running dispatch->barrier->dispatch->barrier as the seed did)
+    dispatched: list[tuple] = []          # (ReadResult, dispatch timestamp)
+    t_start = time.perf_counter()
     i = 0
     pending = list(splits)
     while i < len(pending):
         if fail_after is not None and i == fail_after and failed_node is None:
             # kill the node that would serve the next split; re-plan the
             # not-yet-executed splits it owned onto surviving replicas
+            # (splits dispatched before the failure already ran — their
+            # results stand, exactly as completed map tasks do in Hadoop)
             failed_node = pending[i].node
             store.namenode.kill_node(failed_node)
             qplan = q.plan(store, query)
@@ -95,16 +124,18 @@ def run_job(store: BlockStore, query: q.HailQuery, *,
                 break
         sp = pending[i]
         i += 1
-        t0 = time.perf_counter()
-        if store.layout == "pax":
-            res = q.read_hail(store, query, qplan, list(sp.block_ids))
-        else:
-            res = q.read_hadoop(store, query, list(sp.block_ids))
+        dispatched.append((read_split(sp), time.perf_counter()))
+
+    # --- completion phase: one pass of barriers over the queued results ---
+    bytes_read = 0
+    masks, cols, split_s = [], [], []
+    for res, t_disp in dispatched:
         jax.block_until_ready(res.mask)
-        compute_s += time.perf_counter() - t0
-        bytes_read += res.bytes_read
+        split_s.append(time.perf_counter() - t_disp)
+        bytes_read += int(res.bytes_read)   # lazy scalar -> host, post-barrier
         masks.append(np.asarray(res.mask))
         cols.append({c: np.asarray(v) for c, v in res.cols.items()})
+    compute_s = time.perf_counter() - t_start
 
     n_tasks = len(pending)
     overhead = n_tasks * (cluster.hail_sched_overhead_s
@@ -133,7 +164,8 @@ def run_job(store: BlockStore, query: q.HailQuery, *,
                     overhead_s=overhead, bytes_read=bytes_read,
                     end_to_end_s=e2e,
                     record_reader_s=compute_s / cluster.n_nodes + disk_s,
-                    results=results, rescheduled_tasks=rescheduled)
+                    results=results, rescheduled_tasks=rescheduled,
+                    split_s=split_s)
 
 
 # ---------------------------------------------------------------------------
@@ -146,7 +178,10 @@ def spmd_aggregate(mesh, key_col: jax.Array, val_col: jax.Array,
     """GROUP-BY-sum: (blocks, rows) keys/values/mask sharded on `axis` ->
     (n_buckets,) sums + counts.  n_buckets must divide by mesh[axis]."""
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+    try:  # jax >= 0.6 re-exports shard_map at the top level
+        from jax import shard_map
+    except ImportError:  # pinned 0.4.x: experimental home
+        from jax.experimental.shard_map import shard_map
 
     n_dev = mesh.shape[axis]
     assert n_buckets % n_dev == 0

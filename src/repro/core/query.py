@@ -6,8 +6,18 @@ whose clustered index matches the filter attribute; otherwise fall back to
 any alive replica with a full scan (failover path — Fig 8's experiment).
 
 Record readers are jit'd, *batched over many blocks per call* — that batching
-is exactly what HailSplitting enables (one dispatch per split instead of one
-per block); the benchmarks measure both policies.
+is exactly what HailSplitting enables (ONE dispatch per split instead of one
+per block); the benchmarks measure both policies.  Two properties keep the
+hot path dispatch- and compile-free:
+
+* (lo, hi) are TRACED arguments everywhere (SMEM runtime scalars for the
+  Pallas readers, ordinary traced scalars for the jnp readers), so a
+  compiled reader is reused across every query against the same store
+  shape — zero per-query recompiles;
+* ``read_hail_kernels`` issues exactly one fused ``hail_read`` pallas_call
+  per split regardless of block count, including MIXED-replica and failover
+  splits (per-block ``use_index`` flags select pruned index scan vs full
+  scan inside the kernel).
 """
 from __future__ import annotations
 
@@ -112,8 +122,9 @@ def plan(store: BlockStore, query: HailQuery) -> QueryPlan:
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("partition_size", "lo", "hi"))
-def _index_read(sorted_key, mins, bad, *, partition_size: int, lo: int, hi: int):
+# lo/hi are TRACED: ten different query ranges = one compilation.
+@functools.partial(jax.jit, static_argnames=("partition_size",))
+def _index_read(sorted_key, mins, bad, lo, hi, *, partition_size: int):
     f = jax.vmap(lambda k, m, b: idx.index_scan_mask(k, m, lo, hi,
                                                      partition_size) & ~b)
     mask = f(sorted_key, mins, bad)
@@ -122,8 +133,8 @@ def _index_read(sorted_key, mins, bad, *, partition_size: int, lo: int, hi: int)
     return mask, g(mins)
 
 
-@functools.partial(jax.jit, static_argnames=("lo", "hi"))
-def _full_read(key_col, bad, *, lo: int, hi: int):
+@jax.jit
+def _full_read(key_col, bad, lo, hi):
     return jax.vmap(lambda k, b: idx.full_scan_mask(k, lo, hi) & ~b)(key_col, bad)
 
 
@@ -133,32 +144,54 @@ class ReadResult:
     cols: dict[str, jax.Array]     # col -> (n_blocks, rows)
     mask: jax.Array                # (n_blocks, rows) bool
     rows_read_frac: jax.Array      # (n_blocks,) I/O model input
-    bytes_read: int                # modeled bytes (index scan reads less)
+    bytes_read: "int | jax.Array"  # modeled bytes (index scan reads less);
+    # may be a LAZY 0-d array so building a ReadResult never forces a
+    # device sync — run_job materializes it at the completion barrier
 
 
 def _bad_mask(store: BlockStore, replica: int) -> jax.Array:
     """Bad rows sit at the tail of indexed replicas (sorted there); for an
-    unindexed PAX replica they stay at their original upload positions."""
+    unindexed PAX replica they stay at their original upload positions.
+    Cached per (store, replica) — stores are append-only after upload, so
+    the mask is computed once, not once per split."""
+    cache = store.__dict__.setdefault("_bad_mask_cache", {})
+    if replica in cache:
+        return cache[replica]
     if store.replicas[replica].sort_key is None:
         if store.bad_original is not None:
-            return store.bad_original
-        return jnp.zeros((store.n_blocks, store.rows_per_block), bool)
-    r = jnp.arange(store.rows_per_block, dtype=jnp.int32)[None, :]
-    return r >= (store.rows_per_block - store.bad_counts[:, None])
+            m = store.bad_original
+        else:
+            m = jnp.zeros((store.n_blocks, store.rows_per_block), bool)
+    else:
+        r = jnp.arange(store.rows_per_block, dtype=jnp.int32)[None, :]
+        m = r >= (store.rows_per_block - store.bad_counts[:, None])
+    cache[replica] = m
+    return m
 
 
 def read_hail(store: BlockStore, query: HailQuery, qplan: QueryPlan,
               block_ids: Sequence[int] | None = None) -> ReadResult:
-    """HAIL record reader over (a subset of) blocks, per-replica batched."""
+    """HAIL record reader over (a subset of) blocks, per-replica batched.
+
+    Assembly is GATHER-based: per-replica batches are concatenated in
+    replica order and restored to input order with one inverse-permutation
+    take per array — no per-group ``.at[sel].set`` scatters on the hot path.
+    """
     nb = store.n_blocks
     ids = np.arange(nb) if block_ids is None else np.asarray(block_ids)
     rows = store.rows_per_block
-    mask = jnp.zeros((len(ids), rows), bool)
-    frac = jnp.ones((len(ids),), jnp.float32)
-    out_cols = {c: jnp.zeros((len(ids), rows), store.replicas[0].cols[c].dtype)
-                for c in query.projection + (ROWID,)}
+    proj_cols = query.projection + (ROWID,)
+    if len(ids) == 0:                # degenerate split: empty fixed-shape result
+        return ReadResult(
+            cols={c: jnp.zeros((0, rows), store.replicas[0].cols[c].dtype)
+                  for c in proj_cols},
+            mask=jnp.zeros((0, rows), bool),
+            rows_read_frac=jnp.zeros((0,), jnp.float32), bytes_read=0)
     col_bytes = 4 * rows
-    bytes_read = 0
+    bytes_read = jnp.zeros((), jnp.float32)   # lazy: no sync at dispatch
+    order: list[np.ndarray] = []     # input positions, concatenation order
+    masks, fracs = [], []
+    cols_parts: dict[str, list] = {c: [] for c in proj_cols}
     for rid in np.unique(qplan.replica_for_block[ids]):
         sel = np.nonzero(qplan.replica_for_block[ids] == rid)[0]
         bsel = ids[sel]
@@ -169,32 +202,49 @@ def read_hail(store: BlockStore, query: HailQuery, qplan: QueryPlan,
             col, lo, hi = query.filter
             if use_index:
                 m, fr = _index_read(rep.cols[col][bsel], rep.mins[bsel], bad,
-                                    partition_size=store.partition_size,
-                                    lo=lo, hi=hi)
-                frac = frac.at[sel].set(fr.astype(jnp.float32))
+                                    lo, hi,
+                                    partition_size=store.partition_size)
+                fr = fr.astype(jnp.float32)
             else:
-                m = _full_read(rep.cols[col][bsel], bad, lo=lo, hi=hi)
-                fr = jnp.ones((len(bsel),))
-            mask = mask.at[sel].set(m)
+                m = _full_read(rep.cols[col][bsel], bad, lo, hi)
+                fr = jnp.ones((len(bsel),), jnp.float32)
         else:
             m = ~bad
-            fr = jnp.ones((len(bsel),))
-            mask = mask.at[sel].set(m)
+            fr = jnp.ones((len(bsel),), jnp.float32)
         # modeled I/O: filter column read per partition range; projected
         # columns read for qualifying partitions only (PAX pruning)
-        bytes_read += int(np.asarray(fr).sum() * col_bytes
-                          * (1 + len(query.projection)))
-        for c in query.projection + (ROWID,):
-            out_cols[c] = out_cols[c].at[sel].set(rep.cols[c][bsel])
+        bytes_read += fr.sum() * col_bytes * (1 + len(query.projection))
+        order.append(sel)
+        masks.append(m)
+        fracs.append(fr)
+        for c in proj_cols:
+            cols_parts[c].append(rep.cols[c][bsel])
+    inv = np.empty(len(ids), dtype=np.int64)
+    inv[np.concatenate(order)] = np.arange(len(ids))
+    if len(order) == 1:              # single replica: concat+gather is a noop
+        mask, frac = masks[0], fracs[0]
+        out_cols = {c: v[0] for c, v in cols_parts.items()}
+    else:
+        mask = jnp.concatenate(masks, axis=0)[inv]
+        frac = jnp.concatenate(fracs, axis=0)[inv]
+        out_cols = {c: jnp.concatenate(v, axis=0)[inv]
+                    for c, v in cols_parts.items()}
     return ReadResult(cols=out_cols, mask=mask, rows_read_frac=frac,
                       bytes_read=bytes_read)
 
 
 def read_hail_kernels(store: BlockStore, query: HailQuery, qplan: QueryPlan,
                       block_ids: Sequence[int] | None = None) -> ReadResult:
-    """Kernel-backed record reader: index_search + pax_scan Pallas kernels
-    (interpret mode on CPU).  Semantics identical to read_hail — asserted by
-    tests/test_kernels.py::test_record_reader_kernel_equivalence."""
+    """Kernel-backed record reader: ONE fused ``hail_read`` pallas_call per
+    split (interpret mode on CPU), regardless of block count or replica mix.
+
+    The kernel reads each block's root directory, prunes row tiles outside
+    the qualifying partition range (per-block ``use_index`` selects pruned
+    index scan vs failover full scan), and masks bad rows — so mixed-replica
+    splits and the per-block retry splits ``run_job`` re-plans after a node
+    failure all go through the same single dispatch.  Semantics identical to
+    read_hail — asserted end-to-end by tests/test_kernels.py and
+    tests/test_fused_reader.py."""
     from repro.kernels import ops
 
     assert query.filter is not None and store.layout == "pax"
@@ -202,40 +252,73 @@ def read_hail_kernels(store: BlockStore, query: HailQuery, qplan: QueryPlan,
     ids = (np.arange(store.n_blocks) if block_ids is None
            else np.asarray(block_ids))
     rows = store.rows_per_block
-    rid0 = int(qplan.replica_for_block[ids[0]])
-    assert all(int(qplan.replica_for_block[b]) == rid0 for b in ids), \
-        "kernel reader expects a single-replica split"
-    rep = store.replicas[rid0]
-    use_index = bool(qplan.index_scan[ids].all())
     proj_cols = tuple(query.projection) + (ROWID,)
+    if len(ids) == 0:                # degenerate split: empty fixed-shape result
+        return ReadResult(
+            cols={c: jnp.zeros((0, rows), store.replicas[0].cols[c].dtype)
+                  for c in proj_cols},
+            mask=jnp.zeros((0, rows), bool),
+            rows_read_frac=jnp.zeros((0,), jnp.float32), bytes_read=0)
+    rids = qplan.replica_for_block[ids]
 
-    keys = rep.cols[col][ids]
-    proj = jnp.stack([rep.cols[c][ids] for c in proj_cols], axis=-1)
-    bad = np.asarray(_bad_mask(store, rid0))[ids]
+    # Gather per-block inputs from each block's chosen replica (host-side
+    # group + concat + inverse-permutation, same scheme as read_hail).
+    order, keys_p, proj_p, bad_p, mins_p, uidx_p = [], [], [], [], [], []
+    for rid in np.unique(rids):
+        sel = np.nonzero(rids == rid)[0]
+        bsel = ids[sel]
+        rep = store.replicas[int(rid)]
+        order.append(sel)
+        keys_p.append(rep.cols[col][bsel])
+        proj_p.append(jnp.stack([rep.cols[c][bsel] for c in proj_cols],
+                                axis=-1))
+        bad_p.append(_bad_mask(store, int(rid))[bsel])
+        mins_p.append(rep.mins[bsel])
+        uidx_p.append(np.asarray(qplan.index_scan[bsel], np.int32))
+    inv = np.empty(len(ids), dtype=np.int64)
+    inv[np.concatenate(order)] = np.arange(len(ids))
+    if len(order) == 1:
+        keys, proj, bad = keys_p[0], proj_p[0], bad_p[0]
+        mins, uidx = mins_p[0], uidx_p[0]
+    else:
+        keys = jnp.concatenate(keys_p, axis=0)[inv]
+        proj = jnp.concatenate(proj_p, axis=0)[inv]
+        bad = jnp.concatenate(bad_p, axis=0)[inv]
+        mins = jnp.concatenate(mins_p, axis=0)[inv]
+        uidx = np.concatenate(uidx_p, axis=0)[inv]
 
-    if use_index:
-        pr = np.asarray(ops.index_search(rep.mins[ids], lo, hi))
-    masks, outs, fracs = [], [], []
-    for i, b in enumerate(ids):
-        if use_index:
-            r0 = int(pr[i, 0]) * store.partition_size
-            r1 = min((int(pr[i, 1]) + 1) * store.partition_size, rows)
-        else:
-            r0, r1 = 0, rows
-        m, o, _ = ops.pax_scan(keys[i, r0:r1], proj[i, r0:r1], lo, hi)
-        full_m = jnp.zeros((rows,), bool).at[r0:r1].set(m)
-        full_o = jnp.zeros((rows, len(proj_cols)), proj.dtype).at[r0:r1].set(o)
-        masks.append(full_m & ~bad[i])
-        outs.append(full_o)
-        fracs.append((r1 - r0) / rows)
-    mask = jnp.stack(masks)
-    out = jnp.stack(outs)
+    # one dispatch for the whole split; lo/hi are runtime scalars
+    mask, out, frac = ops.hail_read(mins, keys, proj, bad, jnp.asarray(uidx),
+                                    lo, hi,
+                                    partition_size=store.partition_size)
     cols = {c: out[..., j] for j, c in enumerate(proj_cols)}
     col_bytes = 4 * rows
-    return ReadResult(cols=cols, mask=mask,
-                      rows_read_frac=jnp.asarray(fracs, jnp.float32),
-                      bytes_read=int(sum(fracs) * col_bytes
-                                     * (1 + len(query.projection))))
+    return ReadResult(cols=cols, mask=mask, rows_read_frac=frac,
+                      bytes_read=frac.sum() * col_bytes
+                      * (1 + len(query.projection)))
+
+
+@functools.lru_cache(maxsize=None)
+def _hadoop_reader(schema, filter_col, projection):
+    """Compiled parse+scan for (schema, filter col, projection) — (lo, hi)
+    and the data are traced, so the parser compiles once per job SHAPE, not
+    once per split per query (the seed rebuilt the jit closure per call)."""
+
+    @jax.jit
+    def go(raw, bids, lo, hi):
+        def one(block, bid):
+            cols, bad = ps.parse_block(schema, block)
+            cols[ROWID] = (bid * block.shape[0]
+                           + jnp.arange(block.shape[0], dtype=jnp.int32))
+            if filter_col is not None:
+                m = idx.full_scan_mask(cols[filter_col], lo, hi) & ~bad
+            else:
+                m = ~bad
+            return {c: cols[c] for c in projection + (ROWID,)}, m
+
+        return jax.vmap(one)(raw, bids)
+
+    return go
 
 
 def read_hadoop(store: BlockStore, query: HailQuery,
@@ -246,22 +329,13 @@ def read_hadoop(store: BlockStore, query: HailQuery,
            else np.asarray(block_ids))
     raw = store.replicas[0].cols["__raw__"][ids]
 
-    @jax.jit
-    def go(raw, bids):
-        def one(block, bid):
-            cols, bad = ps.parse_block(store.schema, block)
-            cols[ROWID] = (bid * block.shape[0]
-                           + jnp.arange(block.shape[0], dtype=jnp.int32))
-            if query.filter is not None:
-                col, lo, hi = query.filter
-                m = idx.full_scan_mask(cols[col], lo, hi) & ~bad
-            else:
-                m = ~bad
-            return {c: cols[c] for c in query.projection + (ROWID,)}, m
-
-        return jax.vmap(one)(raw, bids)
-
-    cols, mask = go(raw, jnp.asarray(ids, jnp.int32))
+    go = _hadoop_reader(store.schema, query.filter_col, query.projection)
+    if query.filter is not None:
+        _, lo, hi = query.filter
+    else:
+        lo = hi = 0
+    cols, mask = go(raw, jnp.asarray(ids, jnp.int32),
+                    jnp.asarray(lo, jnp.int32), jnp.asarray(hi, jnp.int32))
     return ReadResult(cols=cols, mask=mask,
                       rows_read_frac=jnp.ones((len(ids),)),
                       bytes_read=int(raw.size))

@@ -10,8 +10,15 @@ covering MANY blocks.  3,200 tasks became 20 in the paper (68x end-to-end).
 For full-scan jobs the default per-block splitting is kept (failover story
 unchanged).
 
-The TPU-framework analogue is real: one jit dispatch per *split* (batched
-record reader over the split's blocks) instead of one per *block*.
+The TPU-framework analogue is real: one dispatch per *split* instead of one
+per *block*.  The jnp record reader batches all of a split's blocks into one
+jit call, and the fused Pallas reader (kernels/hail_reader.py) executes a
+whole split — index lookup, tile-pruned scan, projection — as a SINGLE
+``pallas_call`` with a 2D (block, row_tile) grid, even when the split mixes
+index-scan and failover full-scan blocks.  ``run_job`` then dispatches every
+split asynchronously before one completion barrier, so split execution
+pipelines; the per-task scheduling constant in EXPERIMENTS.md is the only
+remaining per-split cost, exactly the paper's framing.
 """
 from __future__ import annotations
 

@@ -38,11 +38,15 @@ from repro.core.store import (BlockStore, Namenode, Replica, ReplicaInfo,
 
 @dataclasses.dataclass
 class UploadStats:
-    wall_s: float
+    wall_s: float                 # measured compute; == sum(phases.values())
     ascii_bytes: int              # bytes received by the client
     written_bytes: int            # bytes written across all replicas
-    extra_read_bytes: int = 0     # Hadoop++ post-hoc job re-reads
+    extra_read_bytes: int = 0     # Hadoop++ post-hoc job re-reads (modeled
+    #   I/O — charged ONCE, by the disk model, never also as compute wall)
     n_indexes: int = 0
+    phases: dict = dataclasses.field(default_factory=dict)
+    # ^ explicit per-phase measured walls, e.g. {"hdfs": ..,
+    #   "trojan_rewrite": ..} — see EXPERIMENTS.md
 
 
 # ---------------------------------------------------------------------------
@@ -107,7 +111,8 @@ def hail_upload(schema: Schema, raw_blocks: np.ndarray,
                        bad_original=bad)
     stats = UploadStats(wall_s=wall, ascii_bytes=raw_blocks.size,
                         written_bytes=written,
-                        n_indexes=sum(k is not None for k in sort_keys))
+                        n_indexes=sum(k is not None for k in sort_keys),
+                        phases={"hail": wall})
     return store, stats
 
 
@@ -144,7 +149,8 @@ def hdfs_upload(schema: Schema, raw_blocks: np.ndarray, replication: int = 3,
                        bad_counts=jnp.zeros((n_blocks,), jnp.int32),
                        namenode=namenode, layout="row_ascii")
     stats = UploadStats(wall_s=wall, ascii_bytes=raw_blocks.size,
-                        written_bytes=raw_blocks.size * replication)
+                        written_bytes=raw_blocks.size * replication,
+                        phases={"hdfs": wall})
     return store, stats
 
 
@@ -158,21 +164,20 @@ def hadooppp_upload(schema: Schema, raw_blocks: np.ndarray, sort_key: str,
                     n_nodes: int = 10) -> tuple[BlockStore, UploadStats]:
     # phase 1: plain HDFS upload (pays checksum pass over raw bytes)
     _, s1 = hdfs_upload(schema, raw_blocks, replication, n_nodes)
-    # phase 2: the trojan-index MapReduce job re-reads everything, parses,
-    # sorts by the ONE key, rewrites every replica (extra read+write I/O).
+    # phase 2: the trojan-index MapReduce job re-reads every replica, parses,
+    # sorts by the ONE key, rewrites every replica.  The REWRITE compute is
+    # measured (the HAIL-style pipeline below); the RE-READ is disk I/O and
+    # is charged exactly once, as ``extra_read_bytes`` through the disk
+    # model (upload_model_seconds) — the seed double-counted it by timing a
+    # simulated checksum re-read AND re-running the full upload's compute.
     keys = tuple([sort_key] * replication)
-    t0 = time.perf_counter()
-    # verification pass models the job's re-read of all replicas:
-    raw = jnp.asarray(raw_blocks)
-    sums_fn = jax.jit(jax.vmap(ck.chunk_checksums))
-    for _ in range(replication):
-        jax.block_until_ready(sums_fn(raw.reshape(raw.shape[0], -1)))
-    reread_wall = time.perf_counter() - t0
     store, s2 = hail_upload(schema, raw_blocks, keys, partition_size, n_nodes)
+    phases = {"hdfs": s1.wall_s, "trojan_rewrite": s2.wall_s}
     stats = UploadStats(
-        wall_s=s1.wall_s + reread_wall + s2.wall_s,
+        wall_s=sum(phases.values()),
         ascii_bytes=s1.ascii_bytes,
         written_bytes=s1.written_bytes + s2.written_bytes,
         extra_read_bytes=s1.written_bytes,  # job re-reads each replica
-        n_indexes=1)
+        n_indexes=1,
+        phases=phases)
     return store, stats

@@ -1,0 +1,2 @@
+"""Distribution utilities: the logical-axis sharding resolver and the
+bf16 gradient-compression collective."""

@@ -1,0 +1,254 @@
+"""Logical-axis sharding: TensorSpec trees + the rule-based resolver.
+
+Every parameter/activation tensor is declared once as a ``TensorSpec`` with
+*logical* axis names ("embed", "mlp", "batch", ...).  ``resolve_pspec`` maps
+logical axes to *mesh* axes by priority rules with divisibility fallbacks:
+
+* a rule lists candidate mesh axes per logical axis, best first; a candidate
+  may be a COMPOUND tuple like ("pod", "data") meaning shard over both;
+* mesh axes absent from the mesh are dropped from a candidate; for compound
+  candidates the longest PREFIX whose size product divides the dimension is
+  used (batch=2 on a (pod=2, data=16) mesh shards over just "pod");
+* a mesh axis is used at most once per tensor — later logical axes fall
+  through to their next candidate or stay replicated;
+* anything that doesn't divide evenly stays replicated (never errors).
+
+The same specs drive initialization (``init_params``), parameter accounting,
+``NamedSharding`` construction for jit in/out shardings, and the
+``sharding_ctx``/``constrain`` pair that installs with_sharding_constraint
+inside traced step functions.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+import threading
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# TensorSpec
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorSpec:
+    """Shape + logical axes + dtype + init recipe for one tensor."""
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]
+    dtype: Any = jnp.float32
+    init: str = "normal"            # 'normal' | 'zeros' | 'ones' | 'embed'
+    scale: Optional[float] = None   # override the fan-in init scale
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+    @property
+    def nbytes(self) -> int:
+        return self.size * jnp.dtype(self.dtype).itemsize
+
+
+def tspec(shape, axes, dtype=jnp.float32, init: str = "normal",
+          scale: Optional[float] = None) -> TensorSpec:
+    return TensorSpec(tuple(shape), tuple(axes), dtype, init, scale)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, TensorSpec)
+
+
+def map_specs(fn: Callable[[TensorSpec], Any], tree):
+    return jax.tree.map(fn, tree, is_leaf=is_spec)
+
+
+def _leaves(tree) -> list[TensorSpec]:
+    return [s for s in jax.tree.leaves(tree, is_leaf=is_spec) if is_spec(s)]
+
+
+def param_count(tree) -> int:
+    return sum(s.size for s in _leaves(tree))
+
+
+def param_bytes(tree) -> int:
+    return sum(s.nbytes for s in _leaves(tree))
+
+
+# ---------------------------------------------------------------------------
+# Rules + resolver
+# ---------------------------------------------------------------------------
+
+# logical axis -> candidate mesh axes, best first.  Tuples are compound
+# (shard over several mesh axes); missing keys mean "always replicated".
+DEFAULT_RULES: dict[str, tuple] = {
+    # data-parallel axes
+    "batch": (("pod", "data"), "data"),
+    "layers": (),
+    # long-context KV: prefer data, spill to model when batch already took it
+    "kv_seq": ("data", "model"),
+    # weight axes
+    "embed": ("data",),
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "mlp": ("model",),
+    "expert": ("model",),
+    "expert_mlp": ("model",),
+    "ssm_inner": ("model",),
+    "conv_dim": ("model",),
+    "ssm_heads": ("model",),
+    "ssm_state": (),
+    "dt_rank": (),
+    # activation axes (constrain() names)
+    "seq": (),
+    "act_embed": (),
+    "act_vocab": ("model",),
+    "act_mlp": ("model",),
+    "act_kv_heads": ("model",),
+}
+
+# Variant rule sets for the dry-run's --rules flag.
+RULE_PRESETS: dict[str, dict[str, tuple]] = {
+    "baseline": DEFAULT_RULES,
+    # pure data-parallel: weights replicated, only batch-ish axes sharded
+    "dp_only": {"batch": (("pod", "data"), "data"), "kv_seq": ("data",)},
+    # fsdp-flavoured: shard the embed dimension of weights over data too
+    "fsdp": {**DEFAULT_RULES, "embed": ("data",), "vocab": ("model", "data")},
+}
+
+
+def _mesh_sizes(mesh) -> dict[str, int]:
+    # Works for jax.sharding.Mesh AND the duck-typed fake meshes in tests
+    # (only axis_names + devices.shape are required).
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def resolve_pspec(shape: Sequence[int], axes: Sequence[Optional[str]],
+                  mesh, rules: Optional[dict] = None) -> P:
+    """Map logical axes to a PartitionSpec on ``mesh`` (see module doc)."""
+    rules = DEFAULT_RULES if rules is None else rules
+    sizes = _mesh_sizes(mesh)
+    used: set[str] = set()
+    entries: list = []
+    for dim, name in zip(shape, axes):
+        entry = None
+        for cand in rules.get(name, ()) if name else ():
+            cand_axes = (cand,) if isinstance(cand, str) else tuple(cand)
+            # drop mesh axes that don't exist or are already used
+            cand_axes = tuple(a for a in cand_axes
+                              if a in sizes and a not in used)
+            if not cand_axes:
+                continue
+            # longest prefix whose size product divides the dimension
+            for k in range(len(cand_axes), 0, -1):
+                prefix = cand_axes[:k]
+                prod = math.prod(sizes[a] for a in prefix)
+                if prod > 1 and dim % prod == 0:
+                    entry = prefix[0] if k == 1 else prefix
+                    used.update(prefix)
+                    break
+            if entry is not None:
+                break
+        entries.append(entry)
+    while entries and entries[-1] is None:   # trim for clean equality
+        entries.pop()
+    return P(*entries)
+
+
+def named_sharding(spec: TensorSpec, mesh, rules=None) -> NamedSharding:
+    return NamedSharding(mesh, resolve_pspec(spec.shape, spec.axes, mesh,
+                                             rules))
+
+
+def shardings(tree, mesh, rules=None):
+    """TensorSpec tree -> NamedSharding tree (jit in/out_shardings)."""
+    return map_specs(lambda s: named_sharding(s, mesh, rules), tree)
+
+
+def shape_structs(tree, mesh, rules=None):
+    """TensorSpec tree -> ShapeDtypeStruct tree with shardings attached
+    (the dry-run's abstract arguments for jit.lower)."""
+    return map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                       sharding=named_sharding(s, mesh,
+                                                               rules)),
+        tree)
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+
+def _init_one(spec: TensorSpec, key) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "embed":
+        # embedding tables: N(0, 1/d) on the model dim.  Embeddings may be
+        # TIED to the unembed (lm_head = embed.T), so this keeps initial
+        # logits near-uniform (loss ~ ln V); the sqrt(d) embed_scale on the
+        # input side restores O(1) activations.
+        d = spec.shape[-1]
+        return (jax.random.normal(key, spec.shape) * 0.5 * d ** -0.5).astype(
+            spec.dtype)
+    scale = spec.scale
+    if scale is None:
+        fan_in = spec.shape[0] if spec.shape else 1
+        scale = fan_in ** -0.5
+    return (jax.random.normal(key, spec.shape) * scale).astype(spec.dtype)
+
+
+def init_params(tree, key):
+    """Initialize a pytree of arrays from a TensorSpec tree (one fold_in
+    per leaf, path-stable)."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_spec)
+    out = []
+    for i, s in enumerate(leaves):
+        out.append(_init_one(s, jax.random.fold_in(key, i)) if is_spec(s)
+                   else s)
+    return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# In-trace constraints (sharding_ctx / constrain / ctx_axis_size)
+# ---------------------------------------------------------------------------
+
+_CTX = threading.local()
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh, rules=None):
+    """Install (mesh, rules) for constrain() calls inside a traced fn."""
+    prev = getattr(_CTX, "state", None)
+    _CTX.state = (mesh, DEFAULT_RULES if rules is None else rules)
+    try:
+        yield
+    finally:
+        _CTX.state = prev
+
+
+def ctx_axis_size(name: str) -> int:
+    """Size of a mesh axis inside sharding_ctx (1 when absent/no ctx)."""
+    state = getattr(_CTX, "state", None)
+    if state is None:
+        return 1
+    return _mesh_sizes(state[0]).get(name, 1)
+
+
+def constrain(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """with_sharding_constraint(x, resolved axes) — identity outside ctx."""
+    state = getattr(_CTX, "state", None)
+    if state is None:
+        return x
+    mesh, rules = state
+    ps = resolve_pspec(x.shape, tuple(axes), mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, ps))

@@ -6,38 +6,44 @@ Roots are sorted, so searchsorted == popcount of (mins <= v) — one VPU
 reduction instead of a serial binary search (TPU adaptation: data-parallel
 counting beats branchy log-time search on a vector unit).
 
-Grid tiles the block axis; (lo, hi) are compile-time query constants (one
-tiny recompile per query, exactly like the jit'd record readers).
+Grid tiles the block axis; (lo, hi) are RUNTIME scalars in SMEM, so one
+compiled kernel serves every query range.  The fused split reader
+(hail_reader.py) inlines this lookup per grid step; this standalone kernel
+remains the batched root-lookup primitive.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
-def _search_kernel(mins_ref, out_ref, *, lo: int, hi: int):
+def _search_kernel(lohi_ref, mins_ref, out_ref):
+    lo = lohi_ref[0, 0]
+    hi = lohi_ref[0, 1]
     mins = mins_ref[...]                                    # (TB, P)
     first = jnp.maximum(jnp.sum(mins <= lo, axis=1).astype(jnp.int32) - 1, 0)
     last = jnp.maximum(jnp.sum(mins <= hi, axis=1).astype(jnp.int32) - 1, 0)
     out_ref[...] = jnp.stack([first, last], axis=1)
 
 
-def index_search(mins: jax.Array, lo: int, hi: int,
+def index_search(mins: jax.Array, lo, hi,
                  *, block_tile: int = 8, interpret: bool = True) -> jax.Array:
-    """mins (blocks, n_parts) sorted rows -> (blocks, 2) int32."""
+    """mins (blocks, n_parts) sorted rows -> (blocks, 2) int32.
+    lo/hi may be python ints or traced values (no per-query recompile)."""
     blocks, n_parts = mins.shape
     tb = min(block_tile, blocks)
     while blocks % tb:
         tb -= 1
-    kernel = functools.partial(_search_kernel, lo=int(lo), hi=int(hi))
+    lohi = jnp.asarray([lo, hi], jnp.int32).reshape(1, 2)
     return pl.pallas_call(
-        kernel,
+        _search_kernel,
         grid=(blocks // tb,),
-        in_specs=[pl.BlockSpec((tb, n_parts), lambda b: (b, 0))],
+        in_specs=[pl.BlockSpec((1, 2), lambda b: (0, 0),
+                               memory_space=pltpu.SMEM),
+                  pl.BlockSpec((tb, n_parts), lambda b: (b, 0))],
         out_specs=pl.BlockSpec((tb, 2), lambda b: (b, 0)),
         out_shape=jax.ShapeDtypeStruct((blocks, 2), jnp.int32),
         interpret=interpret,
-    )(mins)
+    )(lohi, mins)

@@ -6,9 +6,18 @@ pure-jnp oracles in ref.py.  The kernel-backed record reader
 (core.query.read_hail_kernels) calls through these wrappers and is asserted
 equivalent to the jnp reader by the system test suite, so kernel/oracle
 agreement is exercised end-to-end, not only by per-kernel allclose tests.
+
+Dispatch/recompile accounting: every wrapper that backs the record reader
+bumps ``DISPATCH_COUNTS`` per call and ``TRACE_COUNTS`` per retrace (a
+Python side effect inside the traced body runs only when jit actually
+recompiles).  ``reader_stats()`` / ``reset_stats()`` expose them; the
+no-recompile acceptance tests and bench_kernels' BENCH_kernels.json
+regression-guard the counts.  (lo, hi) are traced arguments everywhere —
+new query ranges reuse the compiled readers.
 """
 from __future__ import annotations
 
+import collections
 import functools
 
 import jax
@@ -17,16 +26,30 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.block_sort import bitonic_sort
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.hail_reader import hail_read as _hail_read
 from repro.kernels.index_search import index_search as _index_search
 from repro.kernels.pax_scan import pax_scan as _pax_scan
 
 _USE_KERNELS = True
 _INTERPRET = True   # CPU container: interpret mode; False on real TPUs
 
+DISPATCH_COUNTS: collections.Counter = collections.Counter()
+TRACE_COUNTS: collections.Counter = collections.Counter()
+
 
 def use_kernels(on: bool):
     global _USE_KERNELS
     _USE_KERNELS = on
+
+
+def reset_stats():
+    DISPATCH_COUNTS.clear()
+    TRACE_COUNTS.clear()
+
+
+def reader_stats() -> dict:
+    return {"dispatches": dict(DISPATCH_COUNTS),
+            "traces": dict(TRACE_COUNTS)}
 
 
 def sort_block(keys: jax.Array, cols: dict[str, jax.Array]):
@@ -40,16 +63,59 @@ def sort_block(keys: jax.Array, cols: dict[str, jax.Array]):
     return sorted_keys, out, perm
 
 
-def index_search(mins: jax.Array, lo: int, hi: int) -> jax.Array:
+# -- jitted entry points: lo/hi TRACED, shapes/statics are the only cache keys
+
+
+@jax.jit
+def _index_search_jit(mins, lo, hi):
+    TRACE_COUNTS["index_search"] += 1
+    return _index_search(mins, lo, hi, interpret=_INTERPRET)
+
+
+@jax.jit
+def _pax_scan_jit(key_col, proj, lo, hi):
+    TRACE_COUNTS["pax_scan"] += 1
+    return _pax_scan(key_col, proj, lo, hi, interpret=_INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("partition_size",))
+def _hail_read_jit(mins, keys, proj, bad, use_index, lo, hi,
+                   *, partition_size):
+    TRACE_COUNTS["hail_read"] += 1
+    return _hail_read(mins, keys, proj, bad, use_index, lo, hi,
+                      partition_size=partition_size, interpret=_INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("partition_size",))
+def _hail_read_ref_jit(mins, keys, proj, bad, use_index, lo, hi,
+                       *, partition_size):
+    TRACE_COUNTS["hail_read_ref"] += 1
+    return ref.hail_read(mins, keys, proj, bad, use_index, lo, hi,
+                         partition_size=partition_size)
+
+
+def index_search(mins: jax.Array, lo, hi) -> jax.Array:
+    DISPATCH_COUNTS["index_search"] += 1
     if _USE_KERNELS:
-        return _index_search(mins, lo, hi, interpret=_INTERPRET)
+        return _index_search_jit(mins, lo, hi)
     return ref.index_search(mins, lo, hi)
 
 
-def pax_scan(key_col: jax.Array, proj: jax.Array, lo: int, hi: int):
+def pax_scan(key_col: jax.Array, proj: jax.Array, lo, hi):
+    DISPATCH_COUNTS["pax_scan"] += 1
     if _USE_KERNELS:
-        return _pax_scan(key_col, proj, lo, hi, interpret=_INTERPRET)
+        return _pax_scan_jit(key_col, proj, lo, hi)
     return ref.pax_scan(key_col, proj, lo, hi)
+
+
+def hail_read(mins, keys, proj, bad, use_index, lo, hi, *,
+              partition_size: int):
+    """Fused split reader: ONE dispatch per call (== per split)."""
+    DISPATCH_COUNTS["hail_read"] += 1
+    fn = _hail_read_jit if _USE_KERNELS else _hail_read_ref_jit
+    return fn(mins, keys, proj, bad, use_index,
+              jnp.asarray(lo, jnp.int32), jnp.asarray(hi, jnp.int32),
+              partition_size=partition_size)
 
 
 def attention(q, k, v, *, causal=True, window=None):

@@ -8,19 +8,21 @@ partition range [row_start, row_end) the index lookup selected — the kernel
 never touches the rest of the block (that is the index-scan I/O win).
 
 Grid: (row_tiles,); key tile (TR,) and projection tile (TR, C) in VMEM;
-(lo, hi) are compile-time query constants.
+(lo, hi) are RUNTIME scalars in SMEM — one compiled kernel serves every
+query range (the fused split reader in hail_reader.py subsumes this kernel
+for whole-split reads; this stays as the single-block primitive).
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
-def _scan_kernel(key_ref, proj_ref, mask_ref, out_ref, cnt_ref,
-                 *, lo: int, hi: int):
+def _scan_kernel(lohi_ref, key_ref, proj_ref, mask_ref, out_ref, cnt_ref):
+    lo = lohi_ref[0, 0]
+    hi = lohi_ref[0, 1]
     keys = key_ref[...]                       # (TR,)
     m = (keys >= lo) & (keys <= hi)
     mask_ref[...] = m
@@ -31,17 +33,20 @@ def _scan_kernel(key_ref, proj_ref, mask_ref, out_ref, cnt_ref,
 def pax_scan(key_col: jax.Array, proj: jax.Array, lo, hi,
              *, row_tile: int = 1024, interpret: bool = True):
     """key_col (rows,), proj (rows, C) -> (mask (rows,), masked proj, counts).
+    lo/hi may be python ints or traced values (no per-query recompile).
     """
     rows = key_col.shape[0]
     c = proj.shape[1]
     tr = min(row_tile, rows)
     while rows % tr:
         tr -= 1
-    kernel = functools.partial(_scan_kernel, lo=int(lo), hi=int(hi))
+    lohi = jnp.asarray([lo, hi], jnp.int32).reshape(1, 2)
     mask, out, cnt = pl.pallas_call(
-        kernel,
+        _scan_kernel,
         grid=(rows // tr,),
-        in_specs=[pl.BlockSpec((tr,), lambda i: (i,)),
+        in_specs=[pl.BlockSpec((1, 2), lambda i: (0, 0),
+                               memory_space=pltpu.SMEM),
+                  pl.BlockSpec((tr,), lambda i: (i,)),
                   pl.BlockSpec((tr, c), lambda i: (i, 0))],
         out_specs=[pl.BlockSpec((tr,), lambda i: (i,)),
                    pl.BlockSpec((tr, c), lambda i: (i, 0)),
@@ -50,5 +55,5 @@ def pax_scan(key_col: jax.Array, proj: jax.Array, lo, hi,
                    jax.ShapeDtypeStruct((rows, c), proj.dtype),
                    jax.ShapeDtypeStruct((rows // tr,), jnp.int32)],
         interpret=interpret,
-    )(key_col, proj)
+    )(lohi, key_col, proj)
     return mask, out, cnt

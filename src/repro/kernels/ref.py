@@ -29,6 +29,25 @@ def pax_scan(key_col: jax.Array, proj: jax.Array, lo, hi):
     return mask, out, mask.sum(dtype=jnp.int32)
 
 
+def hail_read(mins, keys, proj, bad, use_index, lo, hi, *,
+              partition_size: int):
+    """Fused split-reader oracle: per-block root lookup + pruned range scan.
+
+    mins (B,P), keys (B,R), proj (B,R,C), bad (B,R) bool, use_index (B,)
+    -> (mask (B,R) bool, masked proj, rows_read_frac (B,) f32)."""
+    rows = keys.shape[1]
+    pr = index_search(mins, lo, hi)                          # (B, 2)
+    r0 = jnp.where(use_index > 0, pr[:, 0] * partition_size, 0)
+    r1 = jnp.where(use_index > 0,
+                   jnp.minimum((pr[:, 1] + 1) * partition_size, rows), rows)
+    r = jnp.arange(rows, dtype=jnp.int32)[None, :]
+    in_range = (r >= r0[:, None]) & (r < r1[:, None])
+    mask = (keys >= lo) & (keys <= hi) & in_range & ~bad
+    out = jnp.where(mask[..., None], proj, 0)
+    frac = (r1 - r0).astype(jnp.float32) / rows
+    return mask, out, frac
+
+
 def selective_scan(delta, x, b, c, a):
     """Naive mamba1 recurrence oracle.  delta,x (B,T,D); b,c (B,T,N);
     a (D,N) negative. -> y (B,T,D), h_final (B,D,N)."""

@@ -118,7 +118,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
             rec["compile_s"] = time.time() - t1
             mem = compiled.memory_analysis()
             print(mem)
-            ca = dict(compiled.cost_analysis())
+            ca = compiled.cost_analysis()
+            ca = ca[0] if isinstance(ca, list) else dict(ca)
             print({k: ca[k] for k in ("flops", "bytes accessed")
                    if k in ca})
             rec["memory"] = {

@@ -10,17 +10,23 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes):
+    # jax >= 0.5 wants explicit axis_types; 0.4.x has no AxisType at all
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(shape, axes,
+                             axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh (tests, elastic re-mesh, single-device smoke)."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(tuple(shape), tuple(axes))
 
 
 def make_host_mesh():

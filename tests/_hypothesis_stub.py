@@ -1,0 +1,97 @@
+"""Minimal stand-in for the `hypothesis` package (not installable in this
+container).  Provides just the surface the test-suite uses — ``given``,
+``settings`` and the ``integers`` / ``sampled_from`` / ``lists`` strategies —
+with DETERMINISTIC example generation (seeded per test name), so property
+tests still sweep a spread of inputs and failures reproduce.
+
+Installed into ``sys.modules['hypothesis']`` by conftest.py only when the
+real package is missing; when hypothesis is available it is used untouched.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng):
+        return self._draw(rng)
+
+
+def integers(min_value, max_value):
+    def draw(rng):
+        # numpy integers() upper bound is exclusive; hypothesis' inclusive
+        return int(rng.integers(min_value, max_value + 1))
+    return _Strategy(draw)
+
+
+def floats(min_value, max_value):
+    def draw(rng):
+        return float(rng.uniform(min_value, max_value))
+    return _Strategy(draw)
+
+
+def sampled_from(options):
+    opts = list(options)
+
+    def draw(rng):
+        return opts[int(rng.integers(0, len(opts)))]
+    return _Strategy(draw)
+
+
+def lists(elements, min_size=0, max_size=10):
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.example(rng) for _ in range(n)]
+    return _Strategy(draw)
+
+
+class settings:  # noqa: N801 - mirrors hypothesis' API
+    def __init__(self, max_examples=DEFAULT_MAX_EXAMPLES, deadline=None, **kw):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn.__stub_max_examples__ = self.max_examples
+        return fn
+
+
+def given(*strategies):
+    """Append drawn values after any pytest-fixture args, like hypothesis.
+
+    The wrapper's signature drops the strategy-bound (trailing) parameters so
+    pytest only injects fixtures for the remaining names.
+    """
+    def deco(fn):
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        fixture_params = params[:len(params) - len(strategies)]
+        drawn_names = [p.name for p in params[len(params) - len(strategies):]]
+
+        @functools.wraps(fn)
+        def wrapper(*fixture_args, **fixture_kw):
+            n = getattr(fn, "__stub_max_examples__", DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(fn.__qualname__.encode())
+            for i in range(n):
+                rng = np.random.default_rng((seed, i))
+                drawn = [s.example(rng) for s in strategies]
+                fn(*fixture_args, **fixture_kw,
+                   **dict(zip(drawn_names, drawn)))
+
+        wrapper.__signature__ = sig.replace(parameters=fixture_params)
+        return wrapper
+    return deco
+
+
+class strategies:  # noqa: N801 - `from hypothesis import strategies as st`
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+    sampled_from = staticmethod(sampled_from)
+    lists = staticmethod(lists)

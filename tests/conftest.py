@@ -1,7 +1,17 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — tests must see the real single
 CPU device (the 512-device override belongs to launch/dryrun.py only)."""
+import sys
+
 import numpy as np
 import pytest
+
+try:  # hypothesis is optional in this container; fall back to the stub
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _hypothesis_stub
+
+    sys.modules["hypothesis"] = _hypothesis_stub
+    sys.modules["hypothesis.strategies"] = _hypothesis_stub.strategies
 
 from repro.core import schema as sc
 from repro.core import upload as up
