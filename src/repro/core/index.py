@@ -45,6 +45,21 @@ def build_root(sorted_key: jax.Array, partition_size: int = PARTITION) -> jax.Ar
     return sorted_key[::partition_size]
 
 
+def build_block_roots(sorted_keys: jax.Array,
+                      partition_size: int = PARTITION) -> jax.Array:
+    """Batched ``build_root``: (k_blocks, rows) -> (k_blocks, n_parts)."""
+    return sorted_keys[:, ::partition_size]
+
+
+def merge_block_roots(mins: jax.Array, block_ids,
+                      new_mins: jax.Array) -> jax.Array:
+    """Incremental root-directory merge (adaptive indexing): splice freshly
+    built per-block root directories into a replica's (n_blocks, n_parts)
+    directory.  Functional — readers holding the old directory are
+    unaffected; the store swaps in the merged one at commit."""
+    return mins.at[jnp.asarray(block_ids)].set(new_mins)
+
+
 def search_range(mins: jax.Array, lo, hi, partition_size: int,
                  n_rows: int) -> tuple[jax.Array, jax.Array]:
     """-> (row_start, row_end) half-open row range covering [lo, hi].

@@ -14,6 +14,13 @@ Two executors:
   ``read_hail_kernels`` Pallas reader.  Node-failure injection re-schedules
   a failed node's splits onto surviving replicas, falling back to full scan
   when the lost replica held the only matching index (paper Fig 8).
+  ``adaptive=AdaptiveConfig(...)`` enables LAZY ADAPTIVE INDEXING ("Towards
+  Zero-Overhead Adaptive Indexing in Hadoop"): full-scan splits additionally
+  sort + index an offered fraction of their still-unindexed blocks — the
+  bitonic ``kernels/block_sort`` does the in-kernel sort, the clustered root
+  directory comes from ``core/index`` — and commit the result back into the
+  ``BlockStore`` mid-job, so repeated jobs over the same store converge from
+  all-full-scan to all-index-scan with no eager upload cost.
 
 * ``spmd_aggregate`` — shard_map engine for cluster-wide aggregations:
   map+combine per device over the block-sharded store, hash-bucket shuffle
@@ -33,6 +40,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import checksum as ck
+from repro.core import index as idx
 from repro.core import query as q
 from repro.core.splitting import Split, hadoop_splits, hail_splits
 from repro.core.store import BlockStore
@@ -52,6 +61,52 @@ class JobStats:
     # ^ per split: completion timestamp - its dispatch timestamp (includes
     #   queue wait behind earlier splits; the pipelining win shows as
     #   map_compute_s << sum(split_s))
+    blocks_indexed: int = 0    # adaptive: indexes committed by THIS job
+    index_build_s: float = 0.0 # measured wall spent building/committing them
+    build_s: list = dataclasses.field(default_factory=list)
+    # ^ per executed split, aligned with split_s: index-build wall piggy-
+    #   backed on that split (0.0 for splits that offered nothing) —
+    #   ``job_tasks`` bridges these into runtime/scheduler Tasks whose
+    #   index_build_s is charged to the task's runtime
+    full_scan_blocks: int = 0  # blocks this job read WITHOUT an index
+    modeled_s: float = 0.0     # deterministic latency: scheduling + disk
+    #   (no measured-compute term — the convergence-curve monotonicity
+    #   guard asserts on this, immune to wall-clock noise)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveConfig:
+    """Lazy adaptive indexing (LIAH) knobs.
+
+    ``offer_rate``: fraction of the job's still-unindexed blocks offered for
+    in-job index building — the per-job build budget is
+    ``ceil(offer_rate * n_unindexed)`` (so an unindexed store converges in
+    ~``ceil(1/offer_rate)`` jobs), spent by full-scan splits in dispatch
+    order.  ``max_build_per_job`` caps the budget to bound the per-job
+    latency tax of building.
+    """
+    offer_rate: float = 0.25
+    max_build_per_job: int = 64
+
+
+def _build_block_indexes(store: BlockStore, replica_id: int, block_ids,
+                         key: str, *, partition_size: int) -> int:
+    """Sort + index + commit ``block_ids`` of one replica by ``key``, as one
+    batched dispatch per call (the ``kernels/block_sort`` bitonic network
+    when rows is a power of two).  Bad records are forced to the tail with
+    the INT32_MAX sentinel, exactly like the eager upload sort."""
+    from repro.kernels import ops
+
+    rep = store.replicas[replica_id]
+    bsel = np.asarray(block_ids)
+    bad = q._bad_mask(store, replica_id)[bsel]     # pre-commit (upload order)
+    sent = jnp.where(bad, jnp.iinfo(jnp.int32).max, rep.cols[key][bsel])
+    cols = {c: v[bsel] for c, v in rep.cols.items()}
+    _, sorted_cols, _ = ops.sort_block(sent, cols)
+    mins = idx.build_block_roots(sorted_cols[key], partition_size)
+    sums = {c: jax.vmap(ck.chunk_checksums)(v) for c, v in sorted_cols.items()}
+    store.commit_block_indexes(replica_id, bsel, key, sorted_cols, mins, sums)
+    return len(bsel)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,16 +119,36 @@ class ClusterModel:
     map_slots: int = 4
 
 
+def job_tasks(stats: JobStats) -> list:
+    """Bridge a finished job into the event-driven cluster simulator: one
+    ``runtime/scheduler.Task`` per executed split, with the measured
+    per-split read wall as the duration and the index-build wall the split
+    piggybacked charged via ``Task.index_build_s`` (the scheduler adds it
+    to the task's runtime, so convergence-era tasks are honestly slower —
+    bench_adaptive reports the resulting makespans)."""
+    from repro.runtime.scheduler import Task
+    return [Task(i, dur, preferred_nodes=(), index_build_s=build)
+            for i, (dur, build) in enumerate(zip(stats.split_s,
+                                                 stats.build_s))]
+
+
 def run_job(store: BlockStore, query: q.HailQuery, *,
             splitting: str = "hail", cluster: ClusterModel = ClusterModel(),
             reduce_fn: Optional[Callable] = None,
             fail_node_at: Optional[float] = None,
-            reader: str = "jnp") -> JobStats:
+            reader: str = "jnp",
+            adaptive: Optional[AdaptiveConfig] = None) -> JobStats:
     """Execute filter/project (+optional reduce) over all blocks.
 
     reader: 'jnp' (batched jnp record reader) or 'kernels' (fused Pallas
     split reader — one pallas_call dispatch per split; interpret mode on
     CPU, so 'jnp' stays the container default).
+
+    adaptive: when set (and the job filters a PAX store), full-scan splits
+    piggyback clustered-index builds for an offered fraction of their
+    unindexed blocks and commit them back into the store — this job's reads
+    keep their dispatch-time plan; the NEXT job plans against the richer
+    store.  Re-queued failover splits full-scan and are offered too.
     """
     qplan = q.plan(store, query)
     if store.layout != "pax":
@@ -88,6 +163,20 @@ def run_job(store: BlockStore, query: q.HailQuery, *,
     failed_node = None
     rescheduled = 0
 
+    # --- adaptive offer budget: ceil(offer_rate * unindexed), capped -------
+    adapt_rid, adapt_col, build_budget = None, None, 0
+    if (adaptive is not None and store.layout == "pax"
+            and query.filter is not None):
+        adapt_col = query.filter_col
+        adapt_rid = store.adaptive_replica_for(adapt_col)
+        if adapt_rid is not None and len(store.unindexed_blocks(adapt_rid)):
+            # per-job quantum: offer_rate of the job's blocks (not of the
+            # shrinking remainder), so an unindexed store converges in
+            # ceil(1/offer_rate) jobs — the EXPERIMENTS.md model
+            build_budget = min(adaptive.max_build_per_job,
+                               int(np.ceil(adaptive.offer_rate
+                                           * store.n_blocks)))
+
     def read_split(sp: Split):
         if store.layout != "pax":
             return q.read_hadoop(store, query, list(sp.block_ids))
@@ -100,6 +189,9 @@ def run_job(store: BlockStore, query: q.HailQuery, *,
     # (jax dispatches asynchronously; the per-split reads pipeline instead
     # of running dispatch->barrier->dispatch->barrier as the seed did)
     dispatched: list[tuple] = []          # (ReadResult, dispatch timestamp)
+    build_s: list[float] = []             # per split, aligned with dispatched
+    blocks_indexed = 0
+    full_scan_blocks = 0
     t_start = time.perf_counter()
     i = 0
     pending = list(splits)
@@ -125,6 +217,27 @@ def run_job(store: BlockStore, query: q.HailQuery, *,
         sp = pending[i]
         i += 1
         dispatched.append((read_split(sp), time.perf_counter()))
+        if not sp.index_scan:
+            full_scan_blocks += len(sp.block_ids)
+        # --- adaptive piggyback: this full-scan split already read these
+        # blocks — sort + index an offered few and commit them for the
+        # NEXT job (this split's own read was dispatched pre-commit) ------
+        b_wall = 0.0
+        if build_budget > 0 and not sp.index_scan:
+            rep = store.replicas[adapt_rid]
+            dead = store.namenode.dead
+            offer = [b for b in sp.block_ids
+                     if not rep.indexed[b]
+                     and int(rep.nodes[b]) not in dead][:build_budget]
+            if offer:
+                t_b = time.perf_counter()
+                built = _build_block_indexes(
+                    store, adapt_rid, offer, adapt_col,
+                    partition_size=store.partition_size)
+                b_wall = time.perf_counter() - t_b
+                build_budget -= built
+                blocks_indexed += built
+        build_s.append(b_wall)
 
     # --- completion phase: one pass of barriers over the queued results ---
     bytes_read = 0
@@ -160,12 +273,15 @@ def run_job(store: BlockStore, query: q.HailQuery, *,
     disk_s = bytes_read / (cluster.disk_bw * cluster.n_nodes)
     e2e = (overhead / (cluster.n_nodes * cluster.map_slots)
            + compute_s / cluster.n_nodes + disk_s)
+    modeled = overhead / (cluster.n_nodes * cluster.map_slots) + disk_s
     return JobStats(n_tasks=n_tasks, map_compute_s=compute_s,
                     overhead_s=overhead, bytes_read=bytes_read,
                     end_to_end_s=e2e,
                     record_reader_s=compute_s / cluster.n_nodes + disk_s,
                     results=results, rescheduled_tasks=rescheduled,
-                    split_s=split_s)
+                    split_s=split_s, blocks_indexed=blocks_indexed,
+                    index_build_s=sum(build_s), build_s=build_s,
+                    full_scan_blocks=full_scan_blocks, modeled_s=modeled)
 
 
 # ---------------------------------------------------------------------------

@@ -94,6 +94,14 @@ class QueryPlan:
 
 
 def plan(store: BlockStore, query: HailQuery) -> QueryPlan:
+    """Replica selection against the store's LIVE per-block index state.
+
+    A replica qualifies a block for index scan only if its clustered index
+    both matches the filter attribute AND has actually been built for that
+    block (``Replica.block_indexed``) — under adaptive indexing blocks of
+    the same replica flip from full scan to index scan as running jobs
+    commit indexes, and re-planning picks that up job over job.
+    """
     nb = store.n_blocks
     rep = np.zeros(nb, dtype=np.int64)
     is_idx = np.zeros(nb, dtype=bool)
@@ -106,7 +114,8 @@ def plan(store: BlockStore, query: HailQuery) -> QueryPlan:
         choice = None
         if want is not None and store.layout == "pax":
             for i in alive:
-                if store.replicas[i].sort_key == want:
+                if (store.replicas[i].sort_key == want
+                        and store.replicas[i].block_indexed(b)):
                     choice = i
                     is_idx[b] = True
                     break
@@ -150,21 +159,26 @@ class ReadResult:
 
 
 def _bad_mask(store: BlockStore, replica: int) -> jax.Array:
-    """Bad rows sit at the tail of indexed replicas (sorted there); for an
-    unindexed PAX replica they stay at their original upload positions.
-    Cached per (store, replica) — stores are append-only after upload, so
-    the mask is computed once, not once per split."""
+    """Bad rows sit at the tail of INDEXED blocks (sorted there); for a
+    block that is still unindexed they stay at their original upload
+    positions — under adaptive indexing one replica mixes both, per block.
+    Cached per (store, replica); ``commit_block_indexes`` invalidates the
+    entry when a job flips blocks from upload order to sorted."""
     cache = store.__dict__.setdefault("_bad_mask_cache", {})
     if replica in cache:
         return cache[replica]
-    if store.replicas[replica].sort_key is None:
-        if store.bad_original is not None:
-            m = store.bad_original
-        else:
-            m = jnp.zeros((store.n_blocks, store.rows_per_block), bool)
+    rep = store.replicas[replica]
+    orig = (store.bad_original if store.bad_original is not None
+            else jnp.zeros((store.n_blocks, store.rows_per_block), bool))
+    if rep.sort_key is None:
+        m = orig
     else:
         r = jnp.arange(store.rows_per_block, dtype=jnp.int32)[None, :]
-        m = r >= (store.rows_per_block - store.bad_counts[:, None])
+        tail = r >= (store.rows_per_block - store.bad_counts[:, None])
+        if rep.indexed.all():
+            m = tail
+        else:
+            m = jnp.where(jnp.asarray(rep.indexed)[:, None], tail, orig)
     cache[replica] = m
     return m
 
@@ -187,6 +201,7 @@ def read_hail(store: BlockStore, query: HailQuery, qplan: QueryPlan,
                   for c in proj_cols},
             mask=jnp.zeros((0, rows), bool),
             rows_read_frac=jnp.zeros((0,), jnp.float32), bytes_read=0)
+    from repro.kernels import ops
     col_bytes = 4 * rows
     bytes_read = jnp.zeros((), jnp.float32)   # lazy: no sync at dispatch
     order: list[np.ndarray] = []     # input positions, concatenation order
@@ -199,6 +214,8 @@ def read_hail(store: BlockStore, query: HailQuery, qplan: QueryPlan,
         bad = _bad_mask(store, int(rid))[bsel]
         use_index = bool(qplan.index_scan[bsel].all()) and query.filter is not None
         if query.filter is not None:
+            kind = "index_scan_blocks" if use_index else "full_scan_blocks"
+            ops.DISPATCH_COUNTS[kind] += len(bsel)
             col, lo, hi = query.filter
             if use_index:
                 m, fr = _index_read(rep.cols[col][bsel], rep.mins[bsel], bad,
@@ -287,8 +304,9 @@ def read_hail_kernels(store: BlockStore, query: HailQuery, qplan: QueryPlan,
         mins = jnp.concatenate(mins_p, axis=0)[inv]
         uidx = np.concatenate(uidx_p, axis=0)[inv]
 
-    # one dispatch for the whole split; lo/hi are runtime scalars
-    mask, out, frac = ops.hail_read(mins, keys, proj, bad, jnp.asarray(uidx),
+    # one dispatch for the whole split; lo/hi are runtime scalars; uidx
+    # stays a host array so ops' scan-mode counters cost no device sync
+    mask, out, frac = ops.hail_read(mins, keys, proj, bad, uidx,
                                     lo, hi,
                                     partition_size=store.partition_size)
     cols = {c: out[..., j] for j, c in enumerate(proj_cols)}

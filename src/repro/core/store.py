@@ -9,6 +9,14 @@ replica reconstructs the logical block (failover invariant).
 ``Namenode`` is the central directory: ``dir_block`` (blockID -> datanodes)
 plus HAIL's addition ``dir_rep`` ((blockID, node) -> HAILBlockReplicaInfo)
 used by the scheduler to route map tasks to matching indexes (§3.3, §4.3).
+
+Adaptive indexing (LIAH, the paper's sequel) makes the store STATE-EVOLVING:
+blocks may upload unindexed (``Replica.indexed`` all-False) and running jobs
+commit per-block clustered indexes back via ``commit_block_indexes`` — the
+replica's columns, root directory, checksums, per-block index flags and the
+namenode's Dir_rep all advance together, and query-side caches (the bad-row
+mask) are invalidated.  Planning reads this LIVE state, so repeated jobs
+converge from all-full-scan to all-index-scan.
 """
 from __future__ import annotations
 
@@ -19,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import index as idx
 from repro.core.schema import ROWID, Schema
 
 
@@ -56,6 +65,13 @@ class Namenode:
         """The paper's new BlockLocation.getHostsWithIndex()."""
         return [r.node for r in self.replicas(block_id) if r.sort_key == key]
 
+    def update_index(self, block_id: int, node: int, sort_key: str):
+        """Adaptive-index commit: a running job built a clustered index for
+        this replica — advance Dir_rep so later planning sees it."""
+        info = self.dir_rep[(block_id, node)]
+        self.dir_rep[(block_id, node)] = dataclasses.replace(
+            info, sort_key=sort_key)
+
     def kill_node(self, node: int):
         self.dead.add(node)
 
@@ -68,12 +84,30 @@ class Namenode:
 
 @dataclasses.dataclass
 class Replica:
-    """One sort order of the whole dataset: per-column (n_blocks, rows)."""
+    """One sort order of the whole dataset: per-column (n_blocks, rows).
+
+    ``sort_key`` is the replica's clustered-index key; ``indexed`` tracks the
+    PER-BLOCK index state (adaptive uploads ship blocks unindexed and jobs
+    commit indexes block by block).  An unindexed block's rows sit in upload
+    order; an indexed block's rows are sorted by ``sort_key`` with bad
+    records at the tail.  ``sort_key is None`` with all-False ``indexed``
+    means the replica is still unclaimed — the first adaptive commit claims
+    it for the workload's filter column.
+    """
     sort_key: Optional[str]
     cols: dict[str, jax.Array]
     mins: Optional[jax.Array]              # (n_blocks, n_partitions)
     checksums: dict[str, jax.Array]        # col -> (n_blocks, n_chunks) u32
     nodes: np.ndarray                      # (n_blocks,) datanode per block
+    indexed: Optional[np.ndarray] = None   # (n_blocks,) bool per-block state
+
+    def __post_init__(self):
+        if self.indexed is None:
+            self.indexed = np.full(len(self.nodes),
+                                   self.sort_key is not None, dtype=bool)
+
+    def block_indexed(self, block_id: int) -> bool:
+        return self.sort_key is not None and bool(self.indexed[block_id])
 
     @property
     def nbytes(self) -> int:
@@ -113,6 +147,59 @@ class BlockStore:
     @property
     def nbytes(self) -> int:
         return sum(r.nbytes for r in self.replicas)
+
+    # -- adaptive indexing: the store is state-evolving ---------------------
+
+    def adaptive_replica_for(self, key: str) -> Optional[int]:
+        """Replica to (keep) converging toward a ``key`` index: a replica
+        already keyed on ``key`` if one exists, else the first unclaimed
+        (sort_key None) PAX replica.  None when every replica is claimed by
+        some other key — adaptive indexing for ``key`` is then impossible."""
+        rid = self.replica_by_key(key)
+        if rid is not None:
+            return rid
+        if self.layout != "pax":
+            return None
+        for i, r in enumerate(self.replicas):
+            if r.sort_key is None:
+                return i
+        return None
+
+    def unindexed_blocks(self, replica_id: int) -> np.ndarray:
+        return np.nonzero(~self.replicas[replica_id].indexed)[0]
+
+    def indexed_fraction(self, key: str) -> float:
+        """Fraction of blocks index-scannable for ``key`` (convergence)."""
+        rid = self.replica_by_key(key)
+        if rid is None:
+            return 0.0
+        return float(self.replicas[rid].indexed.mean())
+
+    def commit_block_indexes(self, replica_id: int, block_ids,
+                             sort_key: str, sorted_cols: dict,
+                             new_mins: jax.Array, new_checksums: dict):
+        """Commit freshly built per-block clustered indexes (adaptive path).
+
+        Splices the sorted columns, per-block root directories and recomputed
+        checksums into the replica (functional ``.at`` updates — reads already
+        dispatched against the old arrays are unaffected), flips the blocks'
+        ``indexed`` flags, advances the namenode's Dir_rep, and invalidates
+        the per-replica bad-row-mask cache (tail layout changed).
+        """
+        rep = self.replicas[replica_id]
+        assert rep.sort_key in (None, sort_key), \
+            f"replica {replica_id} already keyed on {rep.sort_key!r}"
+        rep.sort_key = sort_key
+        bsel = np.asarray(block_ids)
+        for c, v in sorted_cols.items():
+            rep.cols[c] = rep.cols[c].at[bsel].set(v)
+        rep.mins = idx.merge_block_roots(rep.mins, bsel, new_mins)
+        for c, s in new_checksums.items():
+            rep.checksums[c] = rep.checksums[c].at[bsel].set(s)
+        rep.indexed[bsel] = True
+        for b in bsel:
+            self.namenode.update_index(int(b), int(rep.nodes[b]), sort_key)
+        self.__dict__.get("_bad_mask_cache", {}).pop(replica_id, None)
 
 
 def assign_nodes(n_blocks: int, replication: int, n_nodes: int) -> np.ndarray:

@@ -18,10 +18,12 @@ new query ranges reuse the compiled readers.
 from __future__ import annotations
 
 import collections
+import contextlib
 import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ref
 from repro.kernels.block_sort import bitonic_sort
@@ -50,6 +52,47 @@ def reset_stats():
 def reader_stats() -> dict:
     return {"dispatches": dict(DISPATCH_COUNTS),
             "traces": dict(TRACE_COUNTS)}
+
+
+class StatsScope:
+    """Handle yielded by ``stats_scope`` — holds the scope's counters so
+    assertions can also run after the ``with`` block exits."""
+
+    def __init__(self, dispatches: collections.Counter,
+                 traces: collections.Counter):
+        self.dispatches = dispatches
+        self.traces = traces
+
+
+@contextlib.contextmanager
+def stats_scope(merge: bool = True):
+    """Isolated dispatch/trace counters for one test or measurement block.
+
+    Swaps FRESH counters into the module globals on entry and restores the
+    previous ones on exit (merging the scope's counts back in unless
+    ``merge=False``), so dispatch-count assertions see only the calls made
+    inside the scope — independent of test order — instead of relying on
+    module-global ``reset_stats`` mutation racing other tests.
+
+        with ops.stats_scope() as s:
+            q.read_hail_kernels(store, query, qp)
+        assert s.dispatches["hail_read"] == 1
+
+    Note: trace counts are still a property of jit's process-wide cache — a
+    scope observes a retrace only if compilation actually happens inside it.
+    """
+    global DISPATCH_COUNTS, TRACE_COUNTS
+    prev_d, prev_t = DISPATCH_COUNTS, TRACE_COUNTS
+    DISPATCH_COUNTS = collections.Counter()
+    TRACE_COUNTS = collections.Counter()
+    scope = StatsScope(DISPATCH_COUNTS, TRACE_COUNTS)
+    try:
+        yield scope
+    finally:
+        if merge:
+            prev_d.update(scope.dispatches)
+            prev_t.update(scope.traces)
+        DISPATCH_COUNTS, TRACE_COUNTS = prev_d, prev_t
 
 
 def sort_block(keys: jax.Array, cols: dict[str, jax.Array]):
@@ -110,10 +153,19 @@ def pax_scan(key_col: jax.Array, proj: jax.Array, lo, hi):
 
 def hail_read(mins, keys, proj, bad, use_index, lo, hi, *,
               partition_size: int):
-    """Fused split reader: ONE dispatch per call (== per split)."""
+    """Fused split reader: ONE dispatch per call (== per split).
+
+    ``use_index`` should be a HOST (numpy) array: the per-block scan-mode
+    counters read it before it ships to the device, so the non-blocking
+    dispatch path stays free of device->host syncs."""
     DISPATCH_COUNTS["hail_read"] += 1
+    # adaptive-convergence tests assert full_scan_blocks hits 0
+    u = np.asarray(use_index)        # no-op for the host-array callers
+    n_idx = int(u.astype(bool).sum())
+    DISPATCH_COUNTS["index_scan_blocks"] += n_idx
+    DISPATCH_COUNTS["full_scan_blocks"] += u.shape[0] - n_idx
     fn = _hail_read_jit if _USE_KERNELS else _hail_read_ref_jit
-    return fn(mins, keys, proj, bad, use_index,
+    return fn(mins, keys, proj, bad, jnp.asarray(u, jnp.int32),
               jnp.asarray(lo, jnp.int32), jnp.asarray(hi, jnp.int32),
               partition_size=partition_size)
 

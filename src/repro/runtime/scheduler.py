@@ -24,6 +24,9 @@ class Task:
     task_id: int
     duration_s: float                   # nominal duration on a speed-1 node
     preferred_nodes: tuple[int, ...]    # replica locations
+    index_build_s: float = 0.0          # adaptive indexing piggybacked on
+    #   this map task (JobStats.build_s) — charged into the task's runtime
+    #   so convergence-era tasks are honestly slower in the simulation
 
 
 @dataclasses.dataclass
@@ -71,7 +74,8 @@ def run_schedule(tasks: list[Task], cluster: SimulatedCluster,
         seq += 1
         slots[node] -= 1
         speed = cluster.nodes[node].speed
-        run = TaskRun(task.task_id, node, now, now + task.duration_s * speed,
+        work_s = task.duration_s + task.index_build_s
+        run = TaskRun(task.task_id, node, now, now + work_s * speed,
                       speculative=speculative)
         heapq.heappush(running, (run.end_s, seq, run))
         return True

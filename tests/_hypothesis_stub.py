@@ -54,6 +54,22 @@ def lists(elements, min_size=0, max_size=10):
     return _Strategy(draw)
 
 
+def booleans():
+    def draw(rng):
+        return bool(rng.integers(0, 2))
+    return _Strategy(draw)
+
+
+def tuples(*strategies):
+    def draw(rng):
+        return tuple(s.example(rng) for s in strategies)
+    return _Strategy(draw)
+
+
+def just(value):
+    return _Strategy(lambda rng: value)
+
+
 class settings:  # noqa: N801 - mirrors hypothesis' API
     def __init__(self, max_examples=DEFAULT_MAX_EXAMPLES, deadline=None, **kw):
         self.max_examples = max_examples
@@ -95,3 +111,6 @@ class strategies:  # noqa: N801 - `from hypothesis import strategies as st`
     floats = staticmethod(floats)
     sampled_from = staticmethod(sampled_from)
     lists = staticmethod(lists)
+    booleans = staticmethod(booleans)
+    tuples = staticmethod(tuples)
+    just = staticmethod(just)

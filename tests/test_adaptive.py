@@ -1,0 +1,316 @@
+"""Adaptive per-block indexing (LIAH): lazy uploads ship blocks unindexed,
+running jobs build the missing clustered indexes incrementally and commit
+them back into the BlockStore, and repeated jobs converge from all-full-scan
+to all-index-scan with results bit-identical to the eager store throughout.
+
+Also covers the satellite machinery: ``ops.stats_scope`` counter isolation,
+incremental root-directory merge, bad-mask cache invalidation on commit,
+scheduler charging of index-build work, and the workload-driven claiming of
+unkeyed replicas.
+"""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import index as idx
+from repro.core import mapreduce as mr
+from repro.core import query as q
+from repro.core import schema as sc
+from repro.core import upload as up
+from repro.core.schema import ROWID
+from repro.kernels import ops
+from repro.runtime.cluster import SimulatedCluster
+from repro.runtime.scheduler import Task, run_schedule
+
+from conftest import BLOCKS, PART, ROWS
+
+Q1 = q.HailQuery(filter=("visitDate", 7305, 7670), projection=("sourceIP",))
+
+
+@pytest.fixture()
+def lazy_store(uservisits_raw):
+    """FRESH unindexed store per test — adaptive jobs mutate it."""
+    _, raw = uservisits_raw
+    store, _ = up.hail_upload(sc.USERVISITS, raw, index_columns=(),
+                              partition_size=PART, n_nodes=6, replication=3)
+    return store
+
+
+def _sorted_rows(res):
+    rows = q.collect(res)
+    order = np.argsort(rows[ROWID])
+    return {k: v[order] for k, v in rows.items()}
+
+
+# ---------------------------------------------------------------------------
+# Lazy upload
+# ---------------------------------------------------------------------------
+
+
+def test_lazy_upload_ships_unindexed(uservisits_raw):
+    _, raw = uservisits_raw
+    store, stats = up.hail_upload(sc.USERVISITS, raw, index_columns=(),
+                                  partition_size=PART, n_nodes=6)
+    assert set(stats.phases) == {"hail_lazy"}
+    assert stats.n_indexes == 0
+    assert stats.wall_s == pytest.approx(sum(stats.phases.values()))
+    assert store.replication == 3
+    for rep in store.replicas:
+        assert rep.sort_key is None
+        assert not rep.indexed.any()
+    for info in store.namenode.dir_rep.values():
+        assert info.sort_key is None
+    # no replica qualifies any block for index scan yet
+    qp = q.plan(store, Q1)
+    assert not qp.index_scan.any()
+
+
+def test_eager_upload_rejects_conflicting_replication(uservisits_raw):
+    _, raw = uservisits_raw
+    with pytest.raises(ValueError):
+        up.hail_upload(sc.USERVISITS, raw, ["visitDate"], replication=3)
+
+
+def test_lazy_and_eager_rowsets_match(lazy_store, hail_store):
+    qp_l = q.plan(lazy_store, Q1)
+    qp_e = q.plan(hail_store, Q1)
+    lazy = _sorted_rows(q.read_hail(lazy_store, Q1, qp_l))
+    eager = _sorted_rows(q.read_hail(hail_store, Q1, qp_e))
+    np.testing.assert_array_equal(lazy[ROWID], eager[ROWID])
+    np.testing.assert_array_equal(lazy["sourceIP"], eager["sourceIP"])
+
+
+# ---------------------------------------------------------------------------
+# Convergence under repeated adaptive jobs (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_convergence_curve(lazy_store, hail_store):
+    cfg = mr.AdaptiveConfig(offer_rate=0.5)
+    want = mr.run_job(hail_store, Q1).results["n_rows"]
+    eager_rows = _sorted_rows(q.read_hail(hail_store, Q1,
+                                          q.plan(hail_store, Q1)))
+    jobs_to_converge = math.ceil(1 / cfg.offer_rate)
+    modeled, read_bytes, fracs = [], [], []
+    for k in range(jobs_to_converge + 2):
+        with ops.stats_scope() as s:
+            stats = mr.run_job(lazy_store, Q1, adaptive=cfg,
+                               reader="kernels")
+        # results bit-identical to the eager store at every step
+        assert stats.results["n_rows"] == want
+        rows = _sorted_rows(q.read_hail_kernels(lazy_store, Q1,
+                                                q.plan(lazy_store, Q1)))
+        np.testing.assert_array_equal(rows[ROWID], eager_rows[ROWID])
+        np.testing.assert_array_equal(rows["sourceIP"], eager_rows["sourceIP"])
+        modeled.append(stats.modeled_s)
+        read_bytes.append(stats.bytes_read)
+        fracs.append(lazy_store.indexed_fraction("visitDate"))
+        assert sum(stats.build_s) == pytest.approx(stats.index_build_s)
+        if k >= jobs_to_converge:
+            # converged: zero full-scan blocks through the fused reader
+            assert s.dispatches["full_scan_blocks"] == 0
+            assert stats.full_scan_blocks == 0
+            assert stats.blocks_indexed == 0
+    # indexed fraction is monotone and hits 1; latency curve and bytes read
+    # are monotonically non-increasing (modeled_s is deterministic)
+    assert fracs == sorted(fracs)
+    assert fracs[-1] == 1.0
+    assert all(a >= b for a, b in zip(modeled, modeled[1:]))
+    assert all(a >= b for a, b in zip(read_bytes, read_bytes[1:]))
+    assert read_bytes[-1] < read_bytes[0]
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.sampled_from([0.25, 0.34, 0.5, 1.0]),
+       st.sampled_from(["visitDate", "sourceIP", "duration"]),
+       st.tuples(st.integers(0, 1 << 16), st.integers(0, 1 << 16)))
+def test_adaptive_property(uservisits_raw, offer_rate, col, lohi):
+    """For any offer rate, filter column and range: results never change,
+    cumulative blocks_indexed is monotone, and the full-scan fraction hits
+    zero within ceil(1/offer_rate) jobs."""
+    _, raw = uservisits_raw
+    store, _ = up.hail_upload(sc.USERVISITS, raw, index_columns=(),
+                              partition_size=PART, n_nodes=6)
+    lo, hi = min(lohi), max(lohi) + 8000   # keep some selectivity spread
+    query = q.HailQuery(filter=(col, lo, hi), projection=("destURL",))
+    cfg = mr.AdaptiveConfig(offer_rate=offer_rate)
+    first = None
+    cumulative = 0
+    for _ in range(math.ceil(1 / offer_rate) + 1):
+        stats = mr.run_job(store, query, adaptive=cfg)
+        if first is None:
+            first = stats.results["n_rows"]
+        assert stats.results["n_rows"] == first
+        assert stats.blocks_indexed >= 0
+        cumulative += stats.blocks_indexed
+        assert cumulative == int(sum(r.indexed.sum()
+                                     for r in store.replicas))
+    assert store.indexed_fraction(col) == 1.0
+    assert mr.run_job(store, query).full_scan_blocks == 0
+    assert cumulative == BLOCKS
+
+
+def test_adaptive_claims_one_replica_per_workload_key(lazy_store):
+    """Different filter columns claim different replicas — the store
+    converges toward one clustered index per replica, workload-driven."""
+    cfg = mr.AdaptiveConfig(offer_rate=1.0)
+    q2 = q.HailQuery(filter=("sourceIP", 0, 1 << 30),
+                     projection=("visitDate",))
+    mr.run_job(lazy_store, Q1, adaptive=cfg)
+    mr.run_job(lazy_store, q2, adaptive=cfg)
+    assert lazy_store.indexed_fraction("visitDate") == 1.0
+    assert lazy_store.indexed_fraction("sourceIP") == 1.0
+    keys = [r.sort_key for r in lazy_store.replicas]
+    assert keys.count("visitDate") == 1
+    assert keys.count("sourceIP") == 1
+    assert keys.count(None) == 1
+    assert q.plan(lazy_store, Q1).index_scan.all()
+    assert q.plan(lazy_store, q2).index_scan.all()
+
+
+def test_adaptive_noop_on_eager_store(hail_store):
+    """Fully indexed store: adaptive mode must neither build nor perturb."""
+    cfg = mr.AdaptiveConfig(offer_rate=1.0)
+    base = mr.run_job(hail_store, Q1)
+    adapt = mr.run_job(hail_store, Q1, adaptive=cfg)
+    assert adapt.blocks_indexed == 0
+    assert adapt.results["n_rows"] == base.results["n_rows"]
+    # all replicas claimed by OTHER keys -> no replica to adapt for this col
+    q_dur = q.HailQuery(filter=("duration", 0, 5000), projection=("destURL",))
+    adapt2 = mr.run_job(hail_store, q_dur, adaptive=cfg)
+    assert adapt2.blocks_indexed == 0
+    assert hail_store.replica_by_key("duration") is None
+
+
+def test_max_build_per_job_caps_offers(lazy_store):
+    cfg = mr.AdaptiveConfig(offer_rate=1.0, max_build_per_job=1)
+    stats = mr.run_job(lazy_store, Q1, adaptive=cfg)
+    assert stats.blocks_indexed == 1
+    assert lazy_store.indexed_fraction("visitDate") == 1 / BLOCKS
+
+
+# ---------------------------------------------------------------------------
+# Store/index plumbing behind the commit
+# ---------------------------------------------------------------------------
+
+
+def test_merge_block_roots_splices():
+    import jax.numpy as jnp
+    mins = jnp.zeros((4, 8), jnp.int32)
+    new = jnp.arange(16, dtype=jnp.int32).reshape(2, 8)
+    out = idx.merge_block_roots(mins, [1, 3], new)
+    np.testing.assert_array_equal(np.asarray(out[1]), np.arange(8))
+    np.testing.assert_array_equal(np.asarray(out[3]), np.arange(8, 16))
+    np.testing.assert_array_equal(np.asarray(out[0]), 0)
+    np.testing.assert_array_equal(np.asarray(mins[1]), 0)  # functional
+
+
+def test_commit_updates_namenode_and_invalidates_bad_mask(lazy_store):
+    rid = 0
+    before = q._bad_mask(lazy_store, rid)
+    mr.run_job(lazy_store, Q1,
+               adaptive=mr.AdaptiveConfig(offer_rate=1.0))
+    rep = lazy_store.replicas[rid]
+    assert rep.sort_key == "visitDate"
+    assert rep.indexed.all()
+    # namenode Dir_rep advanced with the commit
+    for b in range(lazy_store.n_blocks):
+        info = lazy_store.namenode.dir_rep[(b, int(rep.nodes[b]))]
+        assert info.sort_key == "visitDate"
+        assert lazy_store.namenode.get_hosts_with_index(b, "visitDate")
+    # bad-mask cache was invalidated: bad rows moved to the sorted tail
+    after = q._bad_mask(lazy_store, rid)
+    assert after is not before
+    r = np.arange(ROWS)[None, :]
+    tail = r >= (ROWS - np.asarray(lazy_store.bad_counts)[:, None])
+    np.testing.assert_array_equal(np.asarray(after), tail)
+    # partition minima of committed blocks are sorted (real root directory)
+    mins = np.asarray(rep.mins)
+    assert (np.diff(mins[:, :-1], axis=1) >= 0).all()
+
+
+def test_commit_preserves_per_replica_checksums(lazy_store):
+    from repro.core import checksum as ck
+    mr.run_job(lazy_store, Q1, adaptive=mr.AdaptiveConfig(offer_rate=1.0))
+    rep = lazy_store.replicas[0]
+    other = lazy_store.replicas[1]
+    # replica 0 re-sorted: its checksums now differ from the untouched one
+    assert not bool(np.asarray(
+        rep.checksums["sourceIP"] == other.checksums["sourceIP"]).all())
+    # and they verify against the committed (sorted) bytes, block by block
+    for b in range(lazy_store.n_blocks):
+        block_cols = {c: v[b] for c, v in rep.cols.items()}
+        sums = {c: v[b] for c, v in rep.checksums.items()}
+        assert bool(ck.verify_block(block_cols, sums))
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: index-build work is charged to task durations
+# ---------------------------------------------------------------------------
+
+
+def test_job_tasks_bridge_charges_builds(lazy_store):
+    """run_job's measured split/build walls flow into scheduler Tasks and
+    the build tax shows up in the simulated makespan."""
+    st = mr.run_job(lazy_store, Q1, adaptive=mr.AdaptiveConfig(offer_rate=1.0))
+    assert st.blocks_indexed == BLOCKS and st.index_build_s > 0
+    tasks = mr.job_tasks(st)
+    assert len(tasks) == len(st.split_s)
+    assert sum(t.index_build_s for t in tasks) == pytest.approx(
+        st.index_build_s)
+    cl = lambda: SimulatedCluster(n_nodes=2, map_slots=1, seed=0)
+    stripped = [Task(t.task_id, t.duration_s, t.preferred_nodes)
+                for t in tasks]
+    with_builds = run_schedule(tasks, cl(), spec_factor=None)
+    without = run_schedule(stripped, cl(), spec_factor=None)
+    assert with_builds.makespan_s > without.makespan_s
+
+
+def test_scheduler_charges_index_build_time():
+    cluster = lambda: SimulatedCluster(n_nodes=2, map_slots=1, seed=0)
+    plain = [Task(i, 10.0, preferred_nodes=(i % 2,)) for i in range(4)]
+    building = [Task(i, 10.0, preferred_nodes=(i % 2,), index_build_s=5.0)
+                for i in range(4)]
+    a = run_schedule(plain, cluster(), spec_factor=None)
+    b = run_schedule(building, cluster(), spec_factor=None)
+    assert b.makespan_s == pytest.approx(a.makespan_s + 2 * 5.0)
+    for r in b.runs:
+        assert r.end_s - r.start_s == pytest.approx(15.0)
+
+
+# ---------------------------------------------------------------------------
+# stats_scope: per-test dispatch counters, independent of test order
+# ---------------------------------------------------------------------------
+
+
+def test_stats_scope_isolates_and_merges():
+    base = ops.DISPATCH_COUNTS["hail_read"]            # whatever ran before
+    with ops.stats_scope() as s:
+        assert ops.DISPATCH_COUNTS["hail_read"] == 0   # fresh inside
+        ops.DISPATCH_COUNTS["hail_read"] += 2
+        with ops.stats_scope() as inner:               # scopes nest
+            ops.DISPATCH_COUNTS["hail_read"] += 1
+        assert inner.dispatches["hail_read"] == 1
+        assert ops.DISPATCH_COUNTS["hail_read"] == 3   # merged back
+    assert s.dispatches["hail_read"] == 3
+    assert ops.DISPATCH_COUNTS["hail_read"] == base + 3  # restored + merged
+    with ops.stats_scope(merge=False):
+        ops.DISPATCH_COUNTS["hail_read"] += 99
+    assert ops.DISPATCH_COUNTS["hail_read"] == base + 3  # discarded
+
+
+def test_stats_scope_order_independent_counts(hail_store):
+    """The same read sequence yields the same counts in every scope, no
+    matter what ran before — the old reset_stats() global had to hope no
+    other test raced it."""
+    qp = q.plan(hail_store, Q1)
+    counts = []
+    for _ in range(2):
+        with ops.stats_scope() as s:
+            q.read_hail_kernels(hail_store, Q1, qp)
+            q.read_hail_kernels(hail_store, Q1, qp, [0, 2])
+        counts.append((s.dispatches["hail_read"],
+                       s.dispatches["index_scan_blocks"]))
+    assert counts[0] == counts[1] == (2, BLOCKS + 2)

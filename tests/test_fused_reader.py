@@ -27,29 +27,29 @@ def _equiv(store, query, qp, ids=None):
 
 def test_one_dispatch_per_split(hail_store):
     qp = q.plan(hail_store, Q1)
-    ops.reset_stats()
-    q.read_hail_kernels(hail_store, Q1, qp)                    # all blocks
-    assert ops.DISPATCH_COUNTS["hail_read"] == 1
-    q.read_hail_kernels(hail_store, Q1, qp, [0, 2])            # a 2-block split
-    assert ops.DISPATCH_COUNTS["hail_read"] == 2
+    with ops.stats_scope() as s:
+        q.read_hail_kernels(hail_store, Q1, qp)                # all blocks
+        assert s.dispatches["hail_read"] == 1
+        q.read_hail_kernels(hail_store, Q1, qp, [0, 2])        # 2-block split
+    assert s.dispatches["hail_read"] == 2
     # no stray per-block kernel launches
-    assert ops.DISPATCH_COUNTS["pax_scan"] == 0
-    assert ops.DISPATCH_COUNTS["index_search"] == 0
+    assert s.dispatches["pax_scan"] == 0
+    assert s.dispatches["index_search"] == 0
 
 
 def test_zero_recompiles_across_query_ranges(hail_store):
     qp = q.plan(hail_store, Q1)
     ranges = [(7305, 7670), (0, 100), (1, 2), (5000, 20000), (7, 7),
               (123, 9999), (0, 2**30), (42, 4242), (1000, 1001), (8, 800)]
-    ops.reset_stats()
-    for lo, hi in ranges:
-        query = q.HailQuery(filter=("visitDate", lo, hi),
-                            projection=("sourceIP",))
-        q.read_hail_kernels(hail_store, query, qp)
-    assert ops.DISPATCH_COUNTS["hail_read"] == len(ranges)
+    with ops.stats_scope() as s:
+        for lo, hi in ranges:
+            query = q.HailQuery(filter=("visitDate", lo, hi),
+                                projection=("sourceIP",))
+            q.read_hail_kernels(hail_store, query, qp)
+    assert s.dispatches["hail_read"] == len(ranges)
     # at most the first call traces (0 when another test already warmed the
     # same store shape): ZERO recompiles after the first, across all ranges
-    assert ops.TRACE_COUNTS["hail_read"] <= 1
+    assert s.traces["hail_read"] <= 1
 
 
 def test_mixed_replica_split_equivalence(hail_store):
@@ -60,9 +60,9 @@ def test_mixed_replica_split_equivalence(hail_store):
     qp.replica_for_block[1::2] = other          # half the blocks fail over
     qp.index_scan[1::2] = False                 # ...to a non-matching index
     assert len(np.unique(qp.replica_for_block)) == 2
-    ops.reset_stats()
-    _equiv(hail_store, Q1, qp)
-    assert ops.DISPATCH_COUNTS["hail_read"] == 1  # one fused dispatch
+    with ops.stats_scope() as s:
+        _equiv(hail_store, Q1, qp)
+    assert s.dispatches["hail_read"] == 1       # one fused dispatch
 
 
 def test_failover_split_equivalence(hail_store, oracle_rows):
@@ -90,14 +90,46 @@ def test_run_job_kernel_reader_with_failover(hail_store):
     per-block retry splits re-planned after a node failure — through the
     fused reader, and results match the jnp reader job."""
     base = mr.run_job(hail_store, Q1, splitting="hail")
-    ops.reset_stats()
-    failed = mr.run_job(hail_store, Q1, splitting="hail", fail_node_at=0.5,
-                        reader="kernels")
+    with ops.stats_scope() as s:
+        failed = mr.run_job(hail_store, Q1, splitting="hail",
+                            fail_node_at=0.5, reader="kernels")
     assert failed.results["n_rows"] == base.results["n_rows"]
     assert failed.rescheduled_tasks > 0
     # exactly one fused dispatch per executed split, none per block
-    assert ops.DISPATCH_COUNTS["hail_read"] == failed.n_tasks
-    assert ops.DISPATCH_COUNTS["pax_scan"] == 0
+    assert s.dispatches["hail_read"] == failed.n_tasks
+    assert s.dispatches["pax_scan"] == 0
+
+
+def test_failover_mid_convergence_still_offers_indexing(uservisits_raw):
+    """Kill a node mid-convergence: the re-queued splits of the dead node
+    fall back to full scan on a surviving replica AND are still offered for
+    adaptive indexing, so convergence survives the failure."""
+    _, raw = uservisits_raw
+    store, _ = up.hail_upload(sc.USERVISITS, raw, index_columns=(),
+                              partition_size=128, n_nodes=6)
+    cfg = mr.AdaptiveConfig(offer_rate=0.5)
+    base = mr.run_job(store, Q1, adaptive=cfg)       # partial convergence
+    frac0 = store.indexed_fraction("visitDate")
+    assert 0.0 < frac0 < 1.0
+    with ops.stats_scope() as s:
+        failed = mr.run_job(store, Q1, adaptive=cfg, fail_node_at=0.5,
+                            reader="kernels")
+    assert failed.results["n_rows"] == base.results["n_rows"]
+    assert failed.rescheduled_tasks > 0
+    # every executed split (retries included) = one fused dispatch
+    assert s.dispatches["hail_read"] == failed.n_tasks
+    # unconverged blocks full-scanned...
+    assert s.dispatches["full_scan_blocks"] > 0
+    # ...and the job still built indexes while handling the failure
+    assert failed.blocks_indexed > 0
+    assert store.indexed_fraction("visitDate") > frac0
+    # the store keeps converging to zero full-scan work after the failure
+    while store.indexed_fraction("visitDate") < 1.0:
+        mr.run_job(store, Q1, adaptive=cfg)
+    with ops.stats_scope() as s2:
+        final = mr.run_job(store, Q1, adaptive=cfg, reader="kernels")
+    assert s2.dispatches["full_scan_blocks"] == 0
+    assert final.results["n_rows"] == base.results["n_rows"]
 
 
 def test_run_job_pipelines_splits(hail_store):
