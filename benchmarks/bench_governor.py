@@ -1,0 +1,144 @@
+"""Index-governor reconvergence under a workload shift (two-phase bench).
+
+A lazy store is governed by a one-replica storage budget
+(``max_indexed_blocks = n_blocks``).  Phase A converges the adaptive path
+on ``visitDate``; then the workload SHIFTS to ``sourceIP``: the budget is
+full, so the first phase-B job evicts phase A's replica (LRU victim),
+re-claims it, and the store reconverges on the new column — in
+``ceil(1/offer_rate)`` jobs, the same model as first-time convergence
+(EXPERIMENTS.md).  Reported per job and phase: deterministic modeled
+latency, indexed fractions for both columns, blocks demoted/built, and the
+total indexed blocks (the budget guard).  The CI regression guard fails if
+the budget is ever exceeded, if either phase's modeled curve increases, or
+if the reconverged job is >10% slower than the eager-index baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+
+from benchmarks.common import uservisits_raw
+from repro.core import governor as gv
+from repro.core import mapreduce as mr
+from repro.core import schema as sc
+from repro.core import upload as up
+from repro.core.query import HailQuery
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
+                         "BENCH_kernels.json")
+
+OFFER_RATE = 0.5
+QUERY_A = HailQuery(filter=("visitDate", 7305, 9000), projection=("sourceIP",))
+QUERY_B = HailQuery(filter=("sourceIP", 0, 1 << 30), projection=("visitDate",))
+
+
+def _phase(store, query, cfg, cluster, n_jobs, col, base_rows):
+    out = {"modeled_s": [], "frac": [], "built": [], "demoted": [],
+           "total_indexed": [], "rekey_s": 0.0}
+    for _ in range(n_jobs):
+        st = mr.run_job(store, query, adaptive=cfg, cluster=cluster)
+        assert st.results["n_rows"] == base_rows
+        out["modeled_s"].append(round(st.modeled_s, 4))
+        out["frac"].append(round(store.indexed_fraction(col), 4))
+        out["built"].append(st.blocks_indexed)
+        out["demoted"].append(st.blocks_demoted)
+        out["total_indexed"].append(store.total_indexed_blocks())
+        out["rekey_s"] += st.rekey_s
+    out["rekey_s"] = round(out["rekey_s"], 4)
+    return out
+
+
+def workload_shift(blocks: int = 24, rows: int = 2048,
+                   offer_rate: float = OFFER_RATE) -> dict:
+    cluster = mr.ClusterModel(n_nodes=6, map_slots=1)
+    _, raw = uservisits_raw(blocks=blocks, rows=rows)
+    eager, _ = up.hail_upload(sc.USERVISITS, raw,
+                              ["visitDate", "sourceIP", "adRevenue"],
+                              n_nodes=cluster.n_nodes)
+    lazy, _ = up.hail_upload(sc.USERVISITS, raw, index_columns=(),
+                             replication=3, n_nodes=cluster.n_nodes)
+    budget = blocks                       # exactly one replica's worth
+    gov = gv.govern(lazy, max_indexed_blocks=budget)
+
+    base_a = mr.run_job(eager, QUERY_A, cluster=cluster)   # warm reader jit
+    base_a = mr.run_job(eager, QUERY_A, cluster=cluster)
+    base_b = mr.run_job(eager, QUERY_B, cluster=cluster)
+
+    n_jobs = math.ceil(1 / offer_rate) + 2
+    cfg = mr.AdaptiveConfig(offer_rate=offer_rate)
+    phase_a = _phase(lazy, QUERY_A, cfg, cluster, n_jobs, "visitDate",
+                     base_a.results["n_rows"])
+    phase_b = _phase(lazy, QUERY_B, cfg, cluster, n_jobs, "sourceIP",
+                     base_b.results["n_rows"])
+
+    monotone = all(
+        all(a >= b - 1e-9 for a, b in zip(ph["modeled_s"],
+                                          ph["modeled_s"][1:]))
+        for ph in (phase_a, phase_b))
+    reconverge_jobs = next(i + 1 for i, f in enumerate(phase_b["frac"])
+                           if f >= 1.0)
+    return {
+        "governor_offer_rate": offer_rate,
+        "governor_budget_blocks": budget,
+        "governor_phase_a_modeled_s": phase_a["modeled_s"],
+        "governor_phase_b_modeled_s": phase_b["modeled_s"],
+        "governor_phase_a_frac": phase_a["frac"],
+        "governor_phase_b_frac": phase_b["frac"],
+        "governor_blocks_demoted": phase_a["demoted"] + phase_b["demoted"],
+        "governor_blocks_built": phase_a["built"] + phase_b["built"],
+        "governor_total_indexed": (phase_a["total_indexed"]
+                                   + phase_b["total_indexed"]),
+        "governor_budget_ok": max(phase_a["total_indexed"]
+                                  + phase_b["total_indexed"]) <= budget,
+        "governor_phase_monotone": monotone,
+        "governor_rekey_wall_s": round(phase_a["rekey_s"]
+                                       + phase_b["rekey_s"], 4),
+        "governor_demotions_total": gov.blocks_demoted_total,
+        "governor_jobs_to_reconverge": reconverge_jobs,
+        "governor_jobs_to_reconverge_model": math.ceil(1 / offer_rate),
+        "governor_eager_modeled_s": round(base_b.modeled_s, 4),
+        "governor_reconverged_vs_eager": round(
+            phase_b["modeled_s"][-1] / base_b.modeled_s, 4),
+    }
+
+
+def run(quick: bool = False):
+    blocks, rows = (12, 1024) if quick else (24, 2048)
+    d = workload_shift(blocks=blocks, rows=rows)
+
+    blob = {}
+    if os.path.exists(JSON_PATH):
+        with open(JSON_PATH) as f:
+            blob = json.load(f)
+    blob.update(d)
+    with open(JSON_PATH, "w") as f:
+        json.dump(blob, f, indent=1)
+
+    rows_out = [
+        ("governor_shift_job", d["governor_phase_b_modeled_s"][0] * 1e6,
+         f"demoted={d['governor_blocks_demoted'][len(d['governor_phase_a_frac'])]};"
+         f"rekey_wall_s={d['governor_rekey_wall_s']}"),
+        ("governor_reconverged_job", d["governor_phase_b_modeled_s"][-1] * 1e6,
+         f"eager_us={d['governor_eager_modeled_s'] * 1e6:.0f};"
+         f"ratio={d['governor_reconverged_vs_eager']:.3f};"
+         f"jobs={d['governor_jobs_to_reconverge']}"
+         f"/model={d['governor_jobs_to_reconverge_model']}"),
+    ]
+    for k, (m, f) in enumerate(zip(d["governor_phase_b_modeled_s"],
+                                   d["governor_phase_b_frac"])):
+        rows_out.append((f"governor_phase_b_job_{k}", m * 1e6,
+                         f"frac_b={f};"
+                         f"total_indexed={d['governor_total_indexed'][len(d['governor_phase_a_frac']) + k]}"))
+    return rows_out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small store for CI (12x1024 blocks)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, us, derived in run(quick=args.quick):
+        print(f"{name},{us:.1f},{derived}")

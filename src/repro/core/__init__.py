@@ -1,4 +1,5 @@
 """HAIL core: the paper's contribution as a composable JAX data plane."""
+from repro.core.governor import AccessLog, GovernorConfig, IndexGovernor, govern  # noqa: F401
 from repro.core.index import PARTITION, ClusteredIndex  # noqa: F401
 from repro.core.mapreduce import ClusterModel, JobStats, run_job  # noqa: F401
 from repro.core.query import HailQuery, hail_annotation, plan  # noqa: F401

@@ -1,0 +1,227 @@
+"""Storage-budget index governor: LRU eviction + replica re-claiming.
+
+HAIL's win-win assumes a fixed workload: once adaptive jobs (mapreduce's
+LIAH path) have claimed every replica — one clustered index per replica —
+a SHIFTED workload can never earn an index and degrades to permanent full
+scans; and without a storage budget the indexed footprint only ever grows.
+The governor closes that loop:
+
+* ``AccessLog`` — persistent per-(replica, filter-column) hit/miss counters
+  on the ``BlockStore``, fed by the record readers (``query.read_hail`` /
+  ``read_hail_kernels`` call ``note_read``; the same attribution also lands
+  in ``kernels.ops`` ``reader_stats`` as ``index_scan_blocks[col]`` /
+  ``full_scan_blocks[col]`` counters).  A logical clock stamps every read,
+  so recency is workload-defined, not wall-clock-defined.
+
+* ``GovernorConfig`` — a storage budget: ``max_indexed_blocks`` and/or
+  ``max_indexed_bytes`` bound the TOTAL per-block indexes held across all
+  replicas.  Enforced both proactively (``run_job`` trims build offers and
+  demotes victims to make room) and as a hard backstop at
+  ``BlockStore.commit_block_indexes`` time, so the budget can never be
+  exceeded no matter who commits.
+
+* ``IndexGovernor.victim`` — the LRU/hit-rate policy: among replicas whose
+  clustered index does NOT serve the protected (current) filter columns,
+  pick the one whose (replica, sort_key) record is least recently used,
+  breaking ties toward fewer lifetime hits, then lower replica id.  The
+  chosen replica is DEMOTED (``BlockStore.demote_replica``): its per-block
+  indexes drop back to ``sort_key=None`` upload order, the namenode's
+  Dir_rep rewinds, and the replica becomes re-claimable by the shifted
+  workload through the ordinary adaptive claim/commit path — so a workload
+  shift reconverges in ~``ceil(1/offer_rate)`` jobs (EXPERIMENTS.md).
+
+The governor itself never sorts or reads data; it only decides.  The
+destructive work lives in ``store.demote_replica`` so every store invariant
+(checksums, bad-mask coherence, Dir_rep) is maintained in one place.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Optional, Sequence
+
+if TYPE_CHECKING:  # import cycle guard: store never imports governor
+    from repro.core.store import BlockStore
+
+
+@dataclasses.dataclass
+class AccessRecord:
+    """Hit/miss counters for one (replica, filter-column) pair."""
+    hits: int = 0        # blocks served by an index scan
+    misses: int = 0      # blocks that had to full-scan
+    last_used: int = 0   # AccessLog clock value of the most recent read
+
+
+class AccessLog:
+    """Per-store read-attribution log (persistent across jobs).
+
+    ``record`` is called by the record readers once per (replica, column)
+    batch; the logical ``clock`` advances per call so "recently used" means
+    "recently queried", independent of wall time.
+    """
+
+    def __init__(self):
+        self.clock = 0
+        self.counts: dict[tuple[int, str], AccessRecord] = {}
+
+    def record(self, replica_id: int, col: str, n_index: int, n_full: int):
+        self.clock += 1
+        rec = self.counts.setdefault((replica_id, col), AccessRecord())
+        rec.hits += int(n_index)
+        rec.misses += int(n_full)
+        rec.last_used = self.clock
+
+    def get(self, replica_id: int, col: str) -> Optional[AccessRecord]:
+        return self.counts.get((replica_id, col))
+
+    def col_totals(self, col: str) -> AccessRecord:
+        """Aggregate over replicas (convergence dashboards / tests)."""
+        out = AccessRecord()
+        for (rid, c), rec in self.counts.items():
+            if c == col:
+                out.hits += rec.hits
+                out.misses += rec.misses
+                out.last_used = max(out.last_used, rec.last_used)
+        return out
+
+    def forget_replica(self, replica_id: int):
+        """Demotion rewinds a replica's history — a re-claimed replica
+        starts cold instead of inheriting the old workload's recency."""
+        for key in [k for k in self.counts if k[0] == replica_id]:
+            del self.counts[key]
+
+
+def note_read(store: "BlockStore", replica_id: int, col: str,
+              n_index: int, n_full: int):
+    """Attribute one batch of block reads to the store's ``AccessLog``.
+
+    Creates the log lazily so ungoverned stores pay one dict lookup and
+    stay otherwise untouched.
+    """
+    log = store.access_log
+    if log is None:
+        log = store.access_log = AccessLog()
+    log.record(replica_id, col, n_index, n_full)
+
+
+def attribute_read(store: "BlockStore", replica_id: int, col: str,
+                   n_index: int, n_full: int):
+    """Record-reader hook: ONE source of truth for per-column attribution.
+
+    Bumps the ``reader_stats`` per-column counters
+    (``index_scan_blocks[col]`` / ``full_scan_blocks[col]`` in
+    ``kernels.ops``) and feeds the same numbers into the ``AccessLog`` —
+    both record readers call this so the jnp and fused-kernel paths can
+    never drift apart on the governor's eviction signal.
+    """
+    from repro.kernels import ops
+    ops.DISPATCH_COUNTS[f"index_scan_blocks[{col}]"] += int(n_index)
+    ops.DISPATCH_COUNTS[f"full_scan_blocks[{col}]"] += int(n_full)
+    note_read(store, replica_id, col, n_index, n_full)
+
+
+def note_commit(store: "BlockStore", replica_id: int, col: str):
+    """Commit-time recency stamp: a freshly built index counts as "just
+    used" even before its first read.  Without this a zero-read new index
+    scores (last_used=0, hits=0) — the coldest possible victim — and the
+    next workload shift would thrash the index it just paid to build."""
+    note_read(store, replica_id, col, 0, 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class GovernorConfig:
+    """Storage budget for per-block clustered indexes (whole store).
+
+    ``max_indexed_blocks``: cap on the total number of indexed blocks summed
+    over ALL replicas.  ``max_indexed_bytes``: same cap expressed in bytes
+    (converted via the per-block PAX footprint).  Both ``None`` = unlimited
+    (the governor still tracks demotions but never evicts for space).
+    """
+    max_indexed_blocks: Optional[int] = None
+    max_indexed_bytes: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class DemotionEvent:
+    replica_id: int
+    sort_key: str
+    blocks_dropped: int
+
+
+class IndexGovernor:
+    """Budget enforcement + LRU victim policy.  Pure decision logic — the
+    destructive transition is ``BlockStore.demote_replica``."""
+
+    def __init__(self, config: GovernorConfig):
+        self.config = config
+        self.events: list[DemotionEvent] = []
+
+    # -- budget accounting --------------------------------------------------
+
+    def budget_blocks(self, store: "BlockStore") -> float:
+        limits = []
+        if self.config.max_indexed_blocks is not None:
+            limits.append(float(self.config.max_indexed_blocks))
+        if self.config.max_indexed_bytes is not None:
+            per_block = max(store.replicas[0].nbytes // store.n_blocks, 1)
+            limits.append(float(self.config.max_indexed_bytes // per_block))
+        return min(limits) if limits else float("inf")
+
+    def room(self, store: "BlockStore") -> float:
+        """Indexed blocks the budget still allows (may be negative if the
+        store was over budget when the governor was installed)."""
+        return self.budget_blocks(store) - store.total_indexed_blocks()
+
+    def admit(self, store: "BlockStore", replica_id: int, n_blocks: int) -> int:
+        """Hard backstop at commit time: how many of ``n_blocks`` new
+        per-block indexes fit.  Never demotes — eviction is a scheduled
+        (run_job) decision, admission is an invariant."""
+        room = self.room(store)
+        if room == float("inf"):
+            return n_blocks
+        return max(0, min(n_blocks, int(room)))
+
+    # -- eviction policy ----------------------------------------------------
+
+    def victim(self, store: "BlockStore",
+               protect: Sequence[str] = ()) -> Optional[int]:
+        """LRU victim replica, or None when nothing is evictable.
+
+        Candidates: replicas holding at least one per-block index whose
+        ``sort_key`` is not protected (the current workload's filter columns
+        are protected so a job never evicts the index it is converging on).
+        Ranked by the access log's (replica, sort_key) record: least
+        recently used first, then fewest lifetime hits, then replica id —
+        replicas never queried since the log began sort first.
+        """
+        log = store.access_log
+        best, best_score = None, None
+        for i, rep in enumerate(store.replicas):
+            if rep.sort_key is None or rep.sort_key in protect:
+                continue
+            if rep.indexed is None or not rep.indexed.any():
+                continue
+            rec = log.get(i, rep.sort_key) if log is not None else None
+            score = ((rec.last_used if rec is not None else 0),
+                     (rec.hits if rec is not None else 0), i)
+            if best_score is None or score < best_score:
+                best, best_score = i, score
+        return best
+
+    def note_demotion(self, replica_id: int, sort_key: str,
+                      blocks_dropped: int):
+        self.events.append(DemotionEvent(replica_id, sort_key,
+                                         blocks_dropped))
+
+    @property
+    def blocks_demoted_total(self) -> int:
+        return sum(e.blocks_dropped for e in self.events)
+
+
+def govern(store: "BlockStore", *,
+           max_indexed_blocks: Optional[int] = None,
+           max_indexed_bytes: Optional[int] = None) -> IndexGovernor:
+    """Attach a budget governor to a store (the one-call entry point)."""
+    gov = IndexGovernor(GovernorConfig(max_indexed_blocks=max_indexed_blocks,
+                                       max_indexed_bytes=max_indexed_bytes))
+    store.governor = gov
+    return gov

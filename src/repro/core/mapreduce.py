@@ -72,6 +72,14 @@ class JobStats:
     modeled_s: float = 0.0     # deterministic latency: scheduling + disk
     #   (no measured-compute term — the convergence-curve monotonicity
     #   guard asserts on this, immune to wall-clock noise)
+    blocks_demoted: int = 0    # governor: per-block indexes dropped by THIS
+    #   job's demotions (workload shift re-claiming / budget eviction)
+    rekey_s: float = 0.0       # measured wall spent demoting (un-sorting +
+    #   re-checksumming victims) — the re-key tax of a workload shift
+    demote_s: list = dataclasses.field(default_factory=list)
+    # ^ per executed split, aligned with split_s: demotion wall charged to
+    #   the split that needed the room (0.0 otherwise) — bridged into
+    #   scheduler Tasks via ``Task.rekey_s``, like build_s
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,8 +113,8 @@ def _build_block_indexes(store: BlockStore, replica_id: int, block_ids,
     _, sorted_cols, _ = ops.sort_block(sent, cols)
     mins = idx.build_block_roots(sorted_cols[key], partition_size)
     sums = {c: jax.vmap(ck.chunk_checksums)(v) for c, v in sorted_cols.items()}
-    store.commit_block_indexes(replica_id, bsel, key, sorted_cols, mins, sums)
-    return len(bsel)
+    return store.commit_block_indexes(replica_id, bsel, key, sorted_cols,
+                                      mins, sums)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,11 +133,16 @@ def job_tasks(stats: JobStats) -> list:
     per-split read wall as the duration and the index-build wall the split
     piggybacked charged via ``Task.index_build_s`` (the scheduler adds it
     to the task's runtime, so convergence-era tasks are honestly slower —
-    bench_adaptive reports the resulting makespans)."""
+    bench_adaptive reports the resulting makespans).  Governor demotions
+    are charged the same way through ``Task.rekey_s`` — the split that
+    triggered the eviction pays its un-sort/re-checksum wall."""
     from repro.runtime.scheduler import Task
-    return [Task(i, dur, preferred_nodes=(), index_build_s=build)
-            for i, (dur, build) in enumerate(zip(stats.split_s,
-                                                 stats.build_s))]
+    demote = stats.demote_s or [0.0] * len(stats.split_s)
+    return [Task(i, dur, preferred_nodes=(), index_build_s=build,
+                 rekey_s=rekey)
+            for i, (dur, build, rekey) in enumerate(zip(stats.split_s,
+                                                        stats.build_s,
+                                                        demote))]
 
 
 def run_job(store: BlockStore, query: q.HailQuery, *,
@@ -149,6 +162,14 @@ def run_job(store: BlockStore, query: q.HailQuery, *,
     unindexed blocks and commit them back into the store — this job's reads
     keep their dispatch-time plan; the NEXT job plans against the richer
     store.  Re-queued failover splits full-scan and are offered too.
+
+    When the store carries an index governor (``governor.govern(store)``),
+    adaptive jobs also DEMOTE: if every replica is claimed by other keys,
+    the governor's LRU victim is dropped back to unclaimed so this workload
+    can re-claim it; if committing an offer would exceed the storage
+    budget, victims are evicted (or the offer trimmed) first.  Demotion
+    walls are charged per split (``JobStats.demote_s``/``rekey_s``) and
+    dropped indexes counted in ``JobStats.blocks_demoted``.
     """
     qplan = q.plan(store, query)
     if store.layout != "pax":
@@ -165,17 +186,34 @@ def run_job(store: BlockStore, query: q.HailQuery, *,
 
     # --- adaptive offer budget: ceil(offer_rate * unindexed), capped -------
     adapt_rid, adapt_col, build_budget = None, None, 0
+    governor = store.governor
+    blocks_demoted = 0
+    demote_pending_s = 0.0    # job-start demotion wall, charged to split 0
     if (adaptive is not None and store.layout == "pax"
             and query.filter is not None):
         adapt_col = query.filter_col
         adapt_rid = store.adaptive_replica_for(adapt_col)
+        # per-job quantum: offer_rate of the job's blocks (not of the
+        # shrinking remainder), so an unindexed store converges in
+        # ceil(1/offer_rate) jobs — the EXPERIMENTS.md model
+        quantum = min(adaptive.max_build_per_job,
+                      int(np.ceil(adaptive.offer_rate * store.n_blocks)))
+        if adapt_rid is None and governor is not None and quantum > 0:
+            # workload shift with every replica claimed by other keys: ask
+            # the governor for its LRU victim, demote it, and re-claim —
+            # splits already planned keep reading the demoted replica as a
+            # full scan (row-set preserved: upload order + original bad
+            # mask), so demoting under a live plan is safe.  Gated on a
+            # usable build quantum: a job that can't rebuild must not
+            # destroy an index for nothing.
+            victim = governor.victim(store, protect=(adapt_col,))
+            if victim is not None:
+                t_d = time.perf_counter()
+                blocks_demoted += store.demote_replica(victim)
+                demote_pending_s += time.perf_counter() - t_d
+                adapt_rid = store.adaptive_replica_for(adapt_col)
         if adapt_rid is not None and len(store.unindexed_blocks(adapt_rid)):
-            # per-job quantum: offer_rate of the job's blocks (not of the
-            # shrinking remainder), so an unindexed store converges in
-            # ceil(1/offer_rate) jobs — the EXPERIMENTS.md model
-            build_budget = min(adaptive.max_build_per_job,
-                               int(np.ceil(adaptive.offer_rate
-                                           * store.n_blocks)))
+            build_budget = quantum
 
     def read_split(sp: Split):
         if store.layout != "pax":
@@ -190,6 +228,7 @@ def run_job(store: BlockStore, query: q.HailQuery, *,
     # of running dispatch->barrier->dispatch->barrier as the seed did)
     dispatched: list[tuple] = []          # (ReadResult, dispatch timestamp)
     build_s: list[float] = []             # per split, aligned with dispatched
+    demote_s: list[float] = []            # per split, aligned with dispatched
     blocks_indexed = 0
     full_scan_blocks = 0
     t_start = time.perf_counter()
@@ -223,12 +262,26 @@ def run_job(store: BlockStore, query: q.HailQuery, *,
         # blocks — sort + index an offered few and commit them for the
         # NEXT job (this split's own read was dispatched pre-commit) ------
         b_wall = 0.0
+        d_wall, demote_pending_s = demote_pending_s, 0.0
         if build_budget > 0 and not sp.index_scan:
             rep = store.replicas[adapt_rid]
             dead = store.namenode.dead
             offer = [b for b in sp.block_ids
                      if not rep.indexed[b]
                      and int(rep.nodes[b]) not in dead][:build_budget]
+            if offer and governor is not None:
+                # budget pressure: evict LRU victims until the offer fits,
+                # then trim to whatever room remains (never exceed budget)
+                room = governor.room(store)
+                while len(offer) > room:
+                    victim = governor.victim(store, protect=(adapt_col,))
+                    if victim is None:
+                        offer = offer[:max(int(room), 0)]
+                        break
+                    t_d = time.perf_counter()
+                    blocks_demoted += store.demote_replica(victim)
+                    d_wall += time.perf_counter() - t_d
+                    room = governor.room(store)
             if offer:
                 t_b = time.perf_counter()
                 built = _build_block_indexes(
@@ -238,6 +291,7 @@ def run_job(store: BlockStore, query: q.HailQuery, *,
                 build_budget -= built
                 blocks_indexed += built
         build_s.append(b_wall)
+        demote_s.append(d_wall)
 
     # --- completion phase: one pass of barriers over the queued results ---
     bytes_read = 0
@@ -281,7 +335,9 @@ def run_job(store: BlockStore, query: q.HailQuery, *,
                     results=results, rescheduled_tasks=rescheduled,
                     split_s=split_s, blocks_indexed=blocks_indexed,
                     index_build_s=sum(build_s), build_s=build_s,
-                    full_scan_blocks=full_scan_blocks, modeled_s=modeled)
+                    full_scan_blocks=full_scan_blocks, modeled_s=modeled,
+                    blocks_demoted=blocks_demoted, rekey_s=sum(demote_s),
+                    demote_s=demote_s)
 
 
 # ---------------------------------------------------------------------------

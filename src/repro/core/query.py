@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import governor as gov
 from repro.core import index as idx
 from repro.core import parse as ps
 from repro.core.schema import ROWID, Schema
@@ -217,6 +218,11 @@ def read_hail(store: BlockStore, query: HailQuery, qplan: QueryPlan,
             kind = "index_scan_blocks" if use_index else "full_scan_blocks"
             ops.DISPATCH_COUNTS[kind] += len(bsel)
             col, lo, hi = query.filter
+            # per-column attribution: reader_stats + the store's AccessLog
+            # (the governor's LRU eviction signal)
+            gov.attribute_read(store, int(rid), col,
+                               len(bsel) if use_index else 0,
+                               0 if use_index else len(bsel))
             if use_index:
                 m, fr = _index_read(rep.cols[col][bsel], rep.mins[bsel], bad,
                                     lo, hi,
@@ -285,6 +291,8 @@ def read_hail_kernels(store: BlockStore, query: HailQuery, qplan: QueryPlan,
         sel = np.nonzero(rids == rid)[0]
         bsel = ids[sel]
         rep = store.replicas[int(rid)]
+        n_idx = int(np.asarray(qplan.index_scan[bsel], bool).sum())
+        gov.attribute_read(store, int(rid), col, n_idx, len(bsel) - n_idx)
         order.append(sel)
         keys_p.append(rep.cols[col][bsel])
         proj_p.append(jnp.stack([rep.cols[c][bsel] for c in proj_cols],

@@ -17,6 +17,16 @@ replica's columns, root directory, checksums, per-block index flags and the
 namenode's Dir_rep all advance together, and query-side caches (the bad-row
 mask) are invalidated.  Planning reads this LIVE state, so repeated jobs
 converge from all-full-scan to all-index-scan.
+
+The index governor (core/governor.py) adds the REVERSE transition:
+``demote_replica`` drops a replica's per-block indexes back to
+``sort_key=None`` upload order — columns are un-sorted via the logical
+``__rowid__`` column, the root directory zeroes, checksums are recomputed,
+Dir_rep rewinds, the bad-mask cache invalidates — so a shifted workload can
+re-claim and re-key the replica through the same claim/commit path.  When a
+governor is attached (``store.governor``), ``commit_block_indexes`` also
+enforces its storage budget as a hard backstop: commits are trimmed so the
+total indexed-block count can never exceed the budget.
 """
 from __future__ import annotations
 
@@ -27,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import checksum as ck
 from repro.core import index as idx
 from repro.core.schema import ROWID, Schema
 
@@ -65,9 +76,12 @@ class Namenode:
         """The paper's new BlockLocation.getHostsWithIndex()."""
         return [r.node for r in self.replicas(block_id) if r.sort_key == key]
 
-    def update_index(self, block_id: int, node: int, sort_key: str):
-        """Adaptive-index commit: a running job built a clustered index for
-        this replica — advance Dir_rep so later planning sees it."""
+    def update_index(self, block_id: int, node: int,
+                     sort_key: Optional[str]):
+        """Adaptive-index commit (or governor demotion rewind): a running
+        job built — or the governor dropped — a clustered index for this
+        replica; advance/rewind Dir_rep so later planning sees it.
+        ``sort_key=None`` rewinds the replica to unindexed."""
         info = self.dir_rep[(block_id, node)]
         self.dir_rep[(block_id, node)] = dataclasses.replace(
             info, sort_key=sort_key)
@@ -125,16 +139,30 @@ class BlockStore:
     namenode: Namenode
     layout: str = "pax"
     bad_original: Optional[jax.Array] = None  # (n_blocks, rows) upload order
+    access_log: Any = None                 # governor.AccessLog (lazy, set by
+    #   the record readers' note_read attribution — persistent across jobs)
+    governor: Any = None                   # governor.IndexGovernor when the
+    #   store is budget-governed (commit_block_indexes enforces its budget)
 
     @property
     def replication(self) -> int:
         return len(self.replicas)
 
-    def replica_by_key(self, key: str) -> Optional[int]:
+    def replica_for(self, key: str) -> Optional[int]:
+        """Replica to READ a ``key`` index from: when several replicas share
+        a sort_key (possible after demote→re-claim leaves one mid-re-key),
+        prefer the one with the highest ``indexed`` fraction — it qualifies
+        the most blocks for index scan; ties go to the lowest id."""
+        best, best_frac = None, -1.0
         for i, r in enumerate(self.replicas):
             if r.sort_key == key:
-                return i
-        return None
+                frac = float(r.indexed.mean()) if len(r.indexed) else 0.0
+                if frac > best_frac:
+                    best, best_frac = i, frac
+        return best
+
+    def replica_by_key(self, key: str) -> Optional[int]:
+        return self.replica_for(key)
 
     def alive_replica_ids(self, block_id: int) -> list[int]:
         """Replica indices whose datanode for this block is alive."""
@@ -170,14 +198,20 @@ class BlockStore:
 
     def indexed_fraction(self, key: str) -> float:
         """Fraction of blocks index-scannable for ``key`` (convergence)."""
-        rid = self.replica_by_key(key)
+        rid = self.replica_for(key)
         if rid is None:
             return 0.0
         return float(self.replicas[rid].indexed.mean())
 
+    def total_indexed_blocks(self) -> int:
+        """Per-block indexes held across ALL replicas — the quantity the
+        governor's storage budget bounds."""
+        return int(sum(int(r.indexed.sum()) for r in self.replicas
+                       if r.sort_key is not None))
+
     def commit_block_indexes(self, replica_id: int, block_ids,
                              sort_key: str, sorted_cols: dict,
-                             new_mins: jax.Array, new_checksums: dict):
+                             new_mins: jax.Array, new_checksums: dict) -> int:
         """Commit freshly built per-block clustered indexes (adaptive path).
 
         Splices the sorted columns, per-block root directories and recomputed
@@ -185,12 +219,27 @@ class BlockStore:
         dispatched against the old arrays are unaffected), flips the blocks'
         ``indexed`` flags, advances the namenode's Dir_rep, and invalidates
         the per-replica bad-row-mask cache (tail layout changed).
+
+        When a governor is attached, the commit is trimmed to the budget's
+        remaining room (hard backstop — run_job normally demotes/trims
+        BEFORE building, so a trim here means someone committed directly).
+        Returns the number of blocks actually committed.
         """
         rep = self.replicas[replica_id]
         assert rep.sort_key in (None, sort_key), \
             f"replica {replica_id} already keyed on {rep.sort_key!r}"
-        rep.sort_key = sort_key
         bsel = np.asarray(block_ids)
+        if self.governor is not None:
+            keep = self.governor.admit(self, replica_id, len(bsel))
+            if keep < len(bsel):
+                bsel = bsel[:keep]
+                sorted_cols = {c: v[:keep] for c, v in sorted_cols.items()}
+                new_mins = new_mins[:keep]
+                new_checksums = {c: s[:keep]
+                                 for c, s in new_checksums.items()}
+        if len(bsel) == 0:
+            return 0                     # nothing fits: do not even claim
+        rep.sort_key = sort_key
         for c, v in sorted_cols.items():
             rep.cols[c] = rep.cols[c].at[bsel].set(v)
         rep.mins = idx.merge_block_roots(rep.mins, bsel, new_mins)
@@ -200,6 +249,54 @@ class BlockStore:
         for b in bsel:
             self.namenode.update_index(int(b), int(rep.nodes[b]), sort_key)
         self.__dict__.get("_bad_mask_cache", {}).pop(replica_id, None)
+        from repro.core import governor as gv
+        gv.note_commit(self, replica_id, sort_key)
+        return len(bsel)
+
+    def demote_replica(self, replica_id: int) -> int:
+        """Governor eviction: drop a replica's clustered index entirely —
+        the store's first DESTRUCTIVE state transition.
+
+        The replica's rows return to upload order by sorting on the logical
+        ``__rowid__`` column (identity for blocks that were never indexed),
+        the root directory zeroes, per-replica checksums are recomputed for
+        the restored byte order, ``sort_key``/``indexed`` rewind to the
+        unclaimed state, the namenode's Dir_rep rewinds per block, and the
+        bad-row-mask cache invalidates (bad rows move from the sorted tail
+        back to their original upload positions).  The replica is then
+        re-claimable by a later workload via ``adaptive_replica_for`` +
+        ``commit_block_indexes``.  Returns the number of per-block indexes
+        dropped (budget blocks freed).
+        """
+        assert self.layout == "pax", "only PAX replicas carry indexes"
+        rep = self.replicas[replica_id]
+        assert rep.sort_key is not None, \
+            f"replica {replica_id} is already unindexed"
+        old_key = rep.sort_key
+        bsel = np.nonzero(rep.indexed)[0]       # only indexed blocks moved;
+        dropped = len(bsel)                     # the rest are already in
+        if dropped:                             # upload order (mid-re-key)
+            perm = jnp.argsort(rep.cols[ROWID][bsel], axis=1)
+            rep.cols = {
+                c: v.at[bsel].set(jnp.take_along_axis(v[bsel], perm, axis=1))
+                for c, v in rep.cols.items()}
+            rep.checksums = {
+                c: s.at[bsel].set(jax.vmap(ck.chunk_checksums)(
+                    rep.cols[c][bsel]))
+                for c, s in rep.checksums.items()}
+        rep.mins = jnp.zeros(
+            (self.n_blocks, self.rows_per_block // self.partition_size),
+            jnp.int32)
+        rep.sort_key = None
+        rep.indexed = np.zeros(self.n_blocks, dtype=bool)
+        for b in range(self.n_blocks):
+            self.namenode.update_index(b, int(rep.nodes[b]), None)
+        self.__dict__.get("_bad_mask_cache", {}).pop(replica_id, None)
+        if self.access_log is not None:
+            self.access_log.forget_replica(replica_id)
+        if self.governor is not None:
+            self.governor.note_demotion(replica_id, old_key, dropped)
+        return dropped
 
 
 def assign_nodes(n_blocks: int, replication: int, n_nodes: int) -> np.ndarray:

@@ -157,7 +157,10 @@ def hail_read(mins, keys, proj, bad, use_index, lo, hi, *,
 
     ``use_index`` should be a HOST (numpy) array: the per-block scan-mode
     counters read it before it ships to the device, so the non-blocking
-    dispatch path stays free of device->host syncs."""
+    dispatch path stays free of device->host syncs.  (Per-filter-column
+    attribution — ``index_scan_blocks[col]`` etc. — is the record readers'
+    job via ``governor.attribute_read``, which writes the same
+    ``DISPATCH_COUNTS``; this wrapper only knows shapes, not columns.)"""
     DISPATCH_COUNTS["hail_read"] += 1
     # adaptive-convergence tests assert full_scan_blocks hits 0
     u = np.asarray(use_index)        # no-op for the host-array callers

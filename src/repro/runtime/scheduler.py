@@ -27,6 +27,9 @@ class Task:
     index_build_s: float = 0.0          # adaptive indexing piggybacked on
     #   this map task (JobStats.build_s) — charged into the task's runtime
     #   so convergence-era tasks are honestly slower in the simulation
+    rekey_s: float = 0.0                # governor demotion (un-sort +
+    #   re-checksum of an evicted replica) triggered by this task
+    #   (JobStats.demote_s) — charged the same way as index builds
 
 
 @dataclasses.dataclass
@@ -74,7 +77,7 @@ def run_schedule(tasks: list[Task], cluster: SimulatedCluster,
         seq += 1
         slots[node] -= 1
         speed = cluster.nodes[node].speed
-        work_s = task.duration_s + task.index_build_s
+        work_s = task.duration_s + task.index_build_s + task.rekey_s
         run = TaskRun(task.task_id, node, now, now + work_s * speed,
                       speculative=speculative)
         heapq.heappush(running, (run.end_s, seq, run))

@@ -132,6 +132,51 @@ def test_failover_mid_convergence_still_offers_indexing(uservisits_raw):
     assert final.results["n_rows"] == base.results["n_rows"]
 
 
+def test_failover_races_demotion_kernel_reader(uservisits_raw):
+    """Chaos: node loss racing a governor demotion in ONE kernels-reader
+    job.  The re-queued splits must full-scan the just-demoted replica
+    through the fused reader (one dispatch per split, no stray launches),
+    still be offered rebuilds, and the shifted workload must reconverge."""
+    from repro.core import governor as gv
+
+    _, raw = uservisits_raw
+    store, _ = up.hail_upload(sc.USERVISITS, raw, index_columns=(),
+                              partition_size=128, n_nodes=6)
+    n_blocks = store.n_blocks
+    gv.govern(store, max_indexed_blocks=n_blocks)
+    cfg = mr.AdaptiveConfig(offer_rate=1.0)
+    base = mr.run_job(store, Q1, adaptive=cfg)       # converge on visitDate
+    assert store.indexed_fraction("visitDate") == 1.0
+    q2 = q.HailQuery(filter=("sourceIP", 0, 1 << 30),
+                     projection=("visitDate",))
+    base2 = mr.run_job(store, q2)                    # oracle row count
+    with ops.stats_scope() as s:
+        failed = mr.run_job(store, q2, adaptive=cfg, fail_node_at=0.5,
+                            reader="kernels")
+    # the shift evicted visitDate's replica while the failure was handled
+    assert failed.blocks_demoted == n_blocks
+    assert failed.rescheduled_tasks > 0
+    assert failed.results["n_rows"] == base2.results["n_rows"]
+    # every executed split (including post-demotion retries that full-scan
+    # the demoted replica) = exactly one fused dispatch
+    assert s.dispatches["hail_read"] == failed.n_tasks
+    assert s.dispatches["pax_scan"] == 0
+    assert s.dispatches["full_scan_blocks"] > 0
+    assert s.dispatches["full_scan_blocks[sourceIP]"] > 0
+    # the job still built indexes for the new workload under the budget
+    assert failed.blocks_indexed > 0
+    assert store.total_indexed_blocks() <= n_blocks
+    while store.indexed_fraction("sourceIP") < 1.0:
+        mr.run_job(store, q2, adaptive=cfg)
+    with ops.stats_scope() as s2:
+        final = mr.run_job(store, q2, adaptive=cfg, reader="kernels")
+    assert s2.dispatches["full_scan_blocks"] == 0
+    assert final.results["n_rows"] == base2.results["n_rows"]
+    # the old workload still answers exactly, now by full scan
+    refetch = mr.run_job(store, Q1, reader="kernels")
+    assert refetch.results["n_rows"] == base.results["n_rows"]
+
+
 def test_run_job_pipelines_splits(hail_store):
     st = mr.run_job(hail_store, Q1, splitting="hail")
     assert len(st.split_s) == st.n_tasks

@@ -1,0 +1,427 @@
+"""Index governor: storage budgets, LRU eviction, replica re-claiming, and
+workload-shift chaos.
+
+The destructive transition under test is ``BlockStore.demote_replica`` —
+every invariant the adaptive path established (row-sets vs the eager oracle,
+checksums, Dir_rep coherence, bad-mask placement) must hold across index
+REMOVAL and re-keying.  Property tests drive randomized schemas, budgets,
+offer rates and multi-phase filter-column shifts; chaos tests race node
+failure against a demotion inside one job.
+"""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import governor as gv
+from repro.core import mapreduce as mr
+from repro.core import query as q
+from repro.core import schema as sc
+from repro.core import upload as up
+from repro.core.parse import format_rows
+from repro.core.schema import ROWID
+
+from conftest import BLOCKS, PART, ROWS
+
+QA = q.HailQuery(filter=("visitDate", 7305, 9000), projection=("sourceIP",))
+QB = q.HailQuery(filter=("sourceIP", 0, 1 << 30), projection=("visitDate",))
+QC = q.HailQuery(filter=("duration", 0, 5000), projection=("destURL",))
+
+P_ROWS, P_PART = 256, 64
+VMAX = 1 << 20
+
+
+@pytest.fixture()
+def lazy_store(uservisits_raw):
+    """FRESH unindexed store per test — governor jobs mutate it."""
+    _, raw = uservisits_raw
+    store, _ = up.hail_upload(sc.USERVISITS, raw, index_columns=(),
+                              partition_size=PART, n_nodes=6, replication=3)
+    return store
+
+
+def _rowset(store, query):
+    rows = q.collect(q.read_hail(store, query, q.plan(store, query)))
+    order = np.argsort(rows[ROWID])
+    return {k: v[order] for k, v in rows.items()}
+
+
+def _assert_rows_equal(a, b, cols):
+    for k in (*cols, ROWID):
+        np.testing.assert_array_equal(a[k], b[k])
+
+
+def _make_schema(n_cols):
+    return sc.Schema(f"gov{n_cols}",
+                     tuple(sc.Column(f"c{i}") for i in range(n_cols)))
+
+
+def _make_raw(schema, blocks, seed, bad_fraction=0.01):
+    r = np.random.default_rng(seed)
+    cols = {c.name: r.integers(0, VMAX, P_ROWS * blocks, dtype=np.int32)
+            for c in schema.columns}
+    raw = format_rows(schema, cols, bad_fraction=bad_fraction, seed=seed + 1)
+    return cols, raw.reshape(blocks, P_ROWS, -1)
+
+
+# ---------------------------------------------------------------------------
+# The acceptance scenario: two-phase workload shift under a one-replica
+# budget — converge on A, budget forces demotion when B arrives, reconverge
+# on B, row-sets match the eager unbudgeted oracle at EVERY job.
+# ---------------------------------------------------------------------------
+
+
+def test_two_phase_workload_shift(lazy_store, hail_store):
+    gov = gv.govern(lazy_store, max_indexed_blocks=BLOCKS)
+    cfg = mr.AdaptiveConfig(offer_rate=0.5)
+    jobs = math.ceil(1 / cfg.offer_rate) + 1
+    want_a = _rowset(hail_store, QA)
+    for _ in range(jobs):
+        stats = mr.run_job(lazy_store, QA, adaptive=cfg)
+        _assert_rows_equal(_rowset(lazy_store, QA), want_a, QA.projection)
+        assert stats.results["n_rows"] == len(want_a[ROWID])
+        assert lazy_store.total_indexed_blocks() <= BLOCKS
+        assert stats.blocks_demoted == 0          # phase A fits the budget
+    assert lazy_store.indexed_fraction("visitDate") == 1.0
+
+    # phase B: the budget is full — the first B job must evict A's replica
+    # (LRU victim), re-claim it... and keep every row-set exact meanwhile
+    want_b = _rowset(hail_store, QB)
+    demoted, fracs_b = [], []
+    for _ in range(jobs):
+        stats = mr.run_job(lazy_store, QB, adaptive=cfg)
+        _assert_rows_equal(_rowset(lazy_store, QB), want_b, QB.projection)
+        assert stats.results["n_rows"] == len(want_b[ROWID])
+        assert lazy_store.total_indexed_blocks() <= BLOCKS
+        demoted.append(stats.blocks_demoted)
+        fracs_b.append(lazy_store.indexed_fraction("sourceIP"))
+        # demotion wall is measured and charged per split, like builds
+        assert stats.rekey_s == pytest.approx(sum(stats.demote_s))
+        assert len(stats.demote_s) == len(stats.split_s)
+        if stats.blocks_demoted:
+            assert stats.rekey_s > 0
+    assert demoted[0] == BLOCKS and sum(demoted[1:]) == 0
+    assert fracs_b == sorted(fracs_b) and fracs_b[-1] == 1.0
+    # A's index is gone; its replica was re-claimed for B
+    assert lazy_store.indexed_fraction("visitDate") == 0.0
+    assert gov.blocks_demoted_total == BLOCKS
+    # ...and A still answers correctly (full scan over the demoted replica)
+    _assert_rows_equal(_rowset(lazy_store, QA), want_a, QA.projection)
+
+
+def test_reclaim_when_all_replicas_claimed(lazy_store):
+    """Job-start demotion path: every replica claimed by other keys and the
+    budget is NOT the constraint — a shifted workload must still be able to
+    re-claim the LRU replica."""
+    gv.govern(lazy_store, max_indexed_blocks=10 * BLOCKS)
+    cfg = mr.AdaptiveConfig(offer_rate=1.0)
+    mr.run_job(lazy_store, QA, adaptive=cfg)
+    mr.run_job(lazy_store, QB, adaptive=cfg)
+    # claim the third replica too so QC finds nothing unclaimed
+    mr.run_job(lazy_store, QC, adaptive=cfg)
+    assert all(r.sort_key is not None for r in lazy_store.replicas)
+    # keep B and C warm so A is the LRU column when a 4th workload arrives
+    mr.run_job(lazy_store, QB)
+    mr.run_job(lazy_store, QC)
+    q4 = q.HailQuery(filter=("adRevenue", 0, 50_000),
+                     projection=("sourceIP",))
+    stats = mr.run_job(lazy_store, q4, adaptive=cfg)
+    assert stats.blocks_demoted == BLOCKS
+    assert lazy_store.indexed_fraction("visitDate") == 0.0   # LRU evicted
+    assert lazy_store.indexed_fraction("sourceIP") == 1.0    # warm survives
+    assert lazy_store.indexed_fraction("duration") == 1.0
+    assert lazy_store.indexed_fraction("adRevenue") == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Property tests: randomized schemas, budgets, offer rates, phase sequences
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(3, 4),                        # schema width
+       st.integers(2, 3),                        # block count
+       st.integers(2, 3),                        # replication
+       st.sampled_from(["full", "double", "tight"]),   # budget regime
+       st.sampled_from([0.5, 1.0]),              # offer rate
+       st.integers(0, 2**31 - 1))                # data / phase seed
+def test_workload_shift_property(n_cols, blocks, replication, budget_kind,
+                                 offer_rate, seed):
+    """For any store shape, budget and 2-3 phase filter-column sequence:
+    row-sets stay identical to an unbudgeted eager store at every job,
+    ``indexed_fraction`` reconverges to min(1, budget/blocks) after each
+    shift, and the total indexed blocks never exceed the budget."""
+    schema = _make_schema(n_cols)
+    _, raw = _make_raw(schema, blocks, seed)
+    names = schema.names
+    n_phases = 2 + seed % 2
+    cols = [names[(seed + i) % n_cols] for i in range(n_phases)]
+    assert len(set(cols)) == len(cols)           # consecutive phases differ
+    budget = {"full": blocks, "double": 2 * blocks,
+              "tight": max(1, blocks - 1)}[budget_kind]
+    eager, _ = up.hail_upload(schema, raw, list(dict.fromkeys(cols)),
+                              partition_size=P_PART, n_nodes=4)
+    lazy, _ = up.hail_upload(schema, raw, index_columns=(),
+                             replication=replication, partition_size=P_PART,
+                             n_nodes=4)
+    gv.govern(lazy, max_indexed_blocks=budget)
+    cfg = mr.AdaptiveConfig(offer_rate=offer_rate)
+    expected_frac = min(blocks, budget) / blocks
+    for phase, col in enumerate(cols):
+        lo, hi = sorted(((seed >> 3) % VMAX, (seed >> 7) % VMAX))
+        query = q.HailQuery(filter=(col, lo, hi), projection=(names[-1],))
+        want = _rowset(eager, query)
+        fracs = []
+        for _ in range(math.ceil(1 / offer_rate) + 1):
+            stats = mr.run_job(lazy, query, adaptive=cfg)
+            assert stats.results["n_rows"] == len(want[ROWID])
+            _assert_rows_equal(_rowset(lazy, query), want, query.projection)
+            assert lazy.total_indexed_blocks() <= budget
+            fracs.append(lazy.indexed_fraction(col))
+        assert fracs == sorted(fracs)            # reconvergence is monotone
+        assert fracs[-1] == pytest.approx(expected_frac)
+        if phase > 0 and budget < 2 * blocks:
+            # the shift had to evict the previous phase's (LRU) index
+            assert lazy.indexed_fraction(cols[phase - 1]) < expected_frac
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.sampled_from([0.25, 0.5, 0.75]),       # failure point
+       st.sampled_from([0.5, 1.0]),              # offer rate
+       st.integers(0, 2**31 - 1))                # data seed
+def test_chaos_failover_races_demotion(fail_at, offer_rate, seed):
+    """Node loss racing a demotion inside ONE job: the re-queued splits must
+    full-scan the just-demoted replica correctly, the job must still be
+    offered a rebuild, and the store must reconverge afterwards."""
+    schema = _make_schema(3)
+    _, raw = _make_raw(schema, 3, seed)
+    a_col, b_col = schema.names[0], schema.names[1]
+    eager, _ = up.hail_upload(schema, raw, [a_col, b_col],
+                              partition_size=P_PART, n_nodes=4)
+    lazy, _ = up.hail_upload(schema, raw, index_columns=(), replication=2,
+                             partition_size=P_PART, n_nodes=4)
+    gv.govern(lazy, max_indexed_blocks=3)
+    cfg = mr.AdaptiveConfig(offer_rate=offer_rate)
+    qa = q.HailQuery(filter=(a_col, 0, VMAX // 2),
+                     projection=(schema.names[2],))
+    qb = q.HailQuery(filter=(b_col, VMAX // 4, VMAX),
+                     projection=(schema.names[2],))
+    while lazy.indexed_fraction(a_col) < 1.0:
+        mr.run_job(lazy, qa, adaptive=cfg)
+    want = _rowset(eager, qb)
+    stats = mr.run_job(lazy, qb, adaptive=cfg, fail_node_at=fail_at)
+    assert stats.rescheduled_tasks > 0           # the failure really raced
+    assert stats.blocks_demoted == 3             # ...a whole-replica demote
+    assert stats.results["n_rows"] == len(want[ROWID])
+    _assert_rows_equal(_rowset(lazy, qb), want, qb.projection)
+    assert lazy.total_indexed_blocks() <= 3
+    # the re-queued splits were still offered builds (or nothing was left)
+    assert stats.blocks_indexed > 0 or lazy.indexed_fraction(b_col) == 1.0
+    for _ in range(math.ceil(1 / offer_rate) + 1):
+        if lazy.indexed_fraction(b_col) == 1.0:
+            break
+        mr.run_job(lazy, qb, adaptive=cfg)
+    assert lazy.indexed_fraction(b_col) == 1.0   # reconverged post-chaos
+    _assert_rows_equal(_rowset(lazy, qb), want, qb.projection)
+
+
+# ---------------------------------------------------------------------------
+# Demotion invariants (the destructive transition, unit level)
+# ---------------------------------------------------------------------------
+
+
+def test_demote_restores_upload_order_invariants(lazy_store, hail_store):
+    from repro.core import checksum as ck
+    mr.run_job(lazy_store, QA, adaptive=mr.AdaptiveConfig(offer_rate=1.0))
+    rep = lazy_store.replicas[0]
+    assert rep.sort_key == "visitDate" and rep.indexed.all()
+    before_mask = q._bad_mask(lazy_store, 0)
+    untouched = lazy_store.replicas[1]           # still in upload order
+
+    dropped = lazy_store.demote_replica(0)
+    assert dropped == BLOCKS
+    assert rep.sort_key is None and not rep.indexed.any()
+    assert not np.asarray(rep.mins).any()
+    # rows returned to upload order: bit-identical to the untouched replica
+    for c in rep.cols:
+        np.testing.assert_array_equal(np.asarray(rep.cols[c]),
+                                      np.asarray(untouched.cols[c]))
+    # checksums recomputed for the restored byte order, and they verify
+    for b in range(BLOCKS):
+        assert bool(ck.verify_block({c: v[b] for c, v in rep.cols.items()},
+                                    {c: v[b] for c, v in
+                                     rep.checksums.items()}))
+    # namenode Dir_rep rewound
+    for b in range(BLOCKS):
+        info = lazy_store.namenode.dir_rep[(b, int(rep.nodes[b]))]
+        assert info.sort_key is None
+        assert not lazy_store.namenode.get_hosts_with_index(b, "visitDate")
+    # bad-mask cache invalidated: bad rows back at upload positions
+    after_mask = q._bad_mask(lazy_store, 0)
+    assert after_mask is not before_mask
+    np.testing.assert_array_equal(np.asarray(after_mask),
+                                  np.asarray(lazy_store.bad_original))
+    # row-sets still exact vs the eager oracle (pure full scan now)
+    _assert_rows_equal(_rowset(lazy_store, QA), _rowset(hail_store, QA),
+                       QA.projection)
+    # ...and the replica is re-claimable by a different workload
+    assert lazy_store.adaptive_replica_for("sourceIP") == 0
+    mr.run_job(lazy_store, QB, adaptive=mr.AdaptiveConfig(offer_rate=1.0))
+    assert lazy_store.replicas[0].sort_key == "sourceIP"
+    assert lazy_store.indexed_fraction("sourceIP") == 1.0
+
+
+def test_demote_mid_rekey_replica_splices_only_indexed_blocks(lazy_store):
+    """Demoting a partially indexed (mid-re-key) replica must restore the
+    indexed blocks and leave the rest untouched — afterwards the replica is
+    bit-identical (columns AND checksums) to a never-claimed one."""
+    mr._build_block_indexes(lazy_store, 0, [1, 3], "visitDate",
+                            partition_size=PART)
+    assert int(lazy_store.replicas[0].indexed.sum()) == 2
+    assert lazy_store.demote_replica(0) == 2
+    rep, untouched = lazy_store.replicas[0], lazy_store.replicas[1]
+    for c in rep.cols:
+        np.testing.assert_array_equal(np.asarray(rep.cols[c]),
+                                      np.asarray(untouched.cols[c]))
+    for c in rep.checksums:
+        np.testing.assert_array_equal(np.asarray(rep.checksums[c]),
+                                      np.asarray(untouched.checksums[c]))
+
+
+def test_no_demotion_without_build_budget(lazy_store):
+    """A job that cannot rebuild (zero build quantum) must not destroy the
+    LRU index: demotion is only worth it when the shifted workload can
+    actually re-key the freed replica."""
+    gv.govern(lazy_store, max_indexed_blocks=10 * BLOCKS)
+    cfg = mr.AdaptiveConfig(offer_rate=1.0)
+    mr.run_job(lazy_store, QA, adaptive=cfg)
+    mr.run_job(lazy_store, QB, adaptive=cfg)
+    mr.run_job(lazy_store, QC, adaptive=cfg)     # every replica claimed
+    q4 = q.HailQuery(filter=("adRevenue", 0, 50_000),
+                     projection=("sourceIP",))
+    stats = mr.run_job(lazy_store, q4, adaptive=mr.AdaptiveConfig(
+        offer_rate=1.0, max_build_per_job=0))
+    assert stats.blocks_demoted == 0 and stats.blocks_indexed == 0
+    assert lazy_store.indexed_fraction("visitDate") == 1.0   # A survived
+    stats = mr.run_job(lazy_store, q4, adaptive=mr.AdaptiveConfig(
+        offer_rate=0.0))
+    assert stats.blocks_demoted == 0
+    assert lazy_store.indexed_fraction("visitDate") == 1.0
+
+
+def test_budget_backstop_at_commit(lazy_store):
+    """commit_block_indexes must trim direct commits to the budget's room —
+    the budget holds no matter who commits."""
+    gv.govern(lazy_store, max_indexed_blocks=2)
+    built = mr._build_block_indexes(lazy_store, 0, list(range(BLOCKS)),
+                                    "visitDate", partition_size=PART)
+    assert built == 2
+    assert lazy_store.total_indexed_blocks() == 2
+    assert lazy_store.replicas[0].sort_key == "visitDate"
+    # zero room: the commit is refused entirely and must NOT claim
+    built = mr._build_block_indexes(lazy_store, 1, [0, 1], "sourceIP",
+                                    partition_size=PART)
+    assert built == 0
+    assert lazy_store.replicas[1].sort_key is None
+    assert lazy_store.total_indexed_blocks() == 2
+
+
+def test_budget_in_bytes(lazy_store):
+    per_block = lazy_store.replicas[0].nbytes // lazy_store.n_blocks
+    gov = gv.govern(lazy_store, max_indexed_bytes=3 * per_block)
+    assert gov.budget_blocks(lazy_store) == 3
+    cfg = mr.AdaptiveConfig(offer_rate=1.0)
+    mr.run_job(lazy_store, QA, adaptive=cfg)
+    assert lazy_store.total_indexed_blocks() == 3
+    assert lazy_store.indexed_fraction("visitDate") == 3 / BLOCKS
+
+
+def test_victim_policy_is_lru(lazy_store):
+    gv.govern(lazy_store, max_indexed_blocks=2 * BLOCKS)
+    gov = lazy_store.governor
+    cfg = mr.AdaptiveConfig(offer_rate=1.0)
+    mr.run_job(lazy_store, QA, adaptive=cfg)     # replica 0 <- visitDate
+    mr.run_job(lazy_store, QB, adaptive=cfg)     # replica 1 <- sourceIP
+    rid_a = lazy_store.replica_for("visitDate")
+    rid_b = lazy_store.replica_for("sourceIP")
+    mr.run_job(lazy_store, QB)                   # B is warmer than A
+    assert gov.victim(lazy_store, protect=("duration",)) == rid_a
+    mr.run_job(lazy_store, QA)                   # now A is warmer than B
+    mr.run_job(lazy_store, QA)
+    assert gov.victim(lazy_store, protect=("duration",)) == rid_b
+    # the replica being converged on is protected from its own eviction
+    assert gov.victim(lazy_store, protect=("visitDate",)) == rid_b
+    assert gov.victim(lazy_store,
+                      protect=("visitDate", "sourceIP")) is None
+
+
+def test_fresh_index_is_not_the_lru_victim(lazy_store):
+    """A just-committed index that has never served a read must not score
+    as the coldest victim: plan() routes full scans to the FIRST alive
+    replica, so the replica being built during a shift job may finish with
+    zero read records — the commit-time recency stamp keeps the next shift
+    from thrashing the index the store just paid to build."""
+    gv.govern(lazy_store, max_indexed_blocks=2 * BLOCKS)
+    gov = lazy_store.governor
+    cfg = mr.AdaptiveConfig(offer_rate=1.0)
+    mr.run_job(lazy_store, QA, adaptive=cfg)     # old workload: visitDate
+    mr.run_job(lazy_store, QB, adaptive=cfg)     # shift: builds sourceIP
+    rid_a = lazy_store.replica_for("visitDate")
+    rid_b = lazy_store.replica_for("sourceIP")
+    # the B build's reads were all attributed to replica rid_a (alive[0]);
+    # rid_b's only log entry is its commit stamp — still newer than A
+    rec_b = lazy_store.access_log.get(rid_b, "sourceIP")
+    rec_a = lazy_store.access_log.get(rid_a, "visitDate")
+    assert rec_b is not None and rec_b.last_used > rec_a.last_used
+    assert gov.victim(lazy_store, protect=("duration",)) == rid_a
+
+
+def test_access_log_attribution(lazy_store):
+    """Record readers attribute per-(replica, column) hits/misses into the
+    persistent AccessLog AND reader_stats' per-column counters."""
+    from repro.kernels import ops
+    cfg = mr.AdaptiveConfig(offer_rate=1.0)
+    with ops.stats_scope() as s:
+        mr.run_job(lazy_store, QA, adaptive=cfg)      # all full scans
+        mr.run_job(lazy_store, QA)                    # all index scans
+    assert s.dispatches["full_scan_blocks[visitDate]"] == BLOCKS
+    assert s.dispatches["index_scan_blocks[visitDate]"] == BLOCKS
+    log = lazy_store.access_log
+    assert log is not None and log.clock > 0
+    rid = lazy_store.replica_for("visitDate")
+    rec = log.get(rid, "visitDate")
+    assert rec is not None and rec.hits >= BLOCKS
+    totals = log.col_totals("visitDate")
+    assert totals.hits >= BLOCKS and totals.misses >= BLOCKS
+    # demotion forgets the replica's history (a re-claim starts cold)
+    lazy_store.demote_replica(rid)
+    assert log.get(rid, "visitDate") is None
+
+
+# ---------------------------------------------------------------------------
+# Regression: replica_for prefers the most-indexed replica sharing a key
+# ---------------------------------------------------------------------------
+
+
+def test_replica_for_prefers_highest_indexed_fraction(lazy_store):
+    """After demote→re-claim two replicas can share a sort_key with very
+    different indexed fractions; planning must read from the one that
+    qualifies the most blocks."""
+    mr._build_block_indexes(lazy_store, 0, [0], "visitDate",
+                            partition_size=PART)
+    mr._build_block_indexes(lazy_store, 1, list(range(BLOCKS)), "visitDate",
+                            partition_size=PART)
+    assert lazy_store.replicas[0].sort_key == "visitDate"
+    assert lazy_store.replicas[1].sort_key == "visitDate"
+    assert lazy_store.replica_for("visitDate") == 1
+    assert lazy_store.replica_by_key("visitDate") == 1   # alias agrees
+    assert lazy_store.indexed_fraction("visitDate") == 1.0
+    # the adaptive path keeps converging the most-indexed replica
+    assert lazy_store.adaptive_replica_for("visitDate") == 1
+    qp = q.plan(lazy_store, QA)
+    assert qp.index_scan.all()
+    # ties break toward the lowest replica id
+    mr._build_block_indexes(lazy_store, 0, list(range(1, BLOCKS)),
+                            "visitDate", partition_size=PART)
+    assert lazy_store.replica_for("visitDate") == 0

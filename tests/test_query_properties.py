@@ -11,6 +11,7 @@ Shapes are drawn from a small pool so jit caches amortize across examples
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
+from repro.core import governor as gv
 from repro.core import mapreduce as mr
 from repro.core import query as q
 from repro.core import schema as sc
@@ -118,3 +119,41 @@ def test_adaptive_jobs_preserve_rowset(blocks, seed, lohi, offer_rate,
     final = mr.run_job(lazy, query, reader=reader)
     assert final.full_scan_blocks == 0
     assert final.results["n_rows"] == len(want[ROWID])
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(2, 3),                       # block count
+       st.integers(0, 2**31 - 1),               # seed
+       st.tuples(st.integers(0, VMAX), st.integers(0, VMAX)))
+def test_readers_agree_with_demoted_replica(blocks, seed, lohi):
+    """The jnp == fused-kernel == Hadoop-reader equivalence oracle must also
+    hold for stores holding a just-demoted replica AND a mid-re-key replica
+    (partially re-indexed on the shifted workload's column)."""
+    schema = _make_schema(3)
+    cols, raw = _make_raw(schema, blocks, seed, bad_fraction=0.01)
+    lo, hi = min(lohi), max(lohi)
+    names = schema.names
+    a_col, b_col = names[seed % 3], names[(seed + 1) % 3]
+    hail, _ = up.hail_upload(schema, raw, index_columns=(), replication=2,
+                             partition_size=PART, n_nodes=4)
+    hdfs, _ = up.hdfs_upload(schema, raw, replication=2, n_nodes=4)
+    gv.govern(hail, max_indexed_blocks=blocks)
+    # converge on A, then ONE under-offered B job: demotes A's replica and
+    # leaves B's replica mid-re-key (some blocks indexed, some not)
+    qa = q.HailQuery(filter=(a_col, lo, hi), projection=(names[-1],))
+    qb = q.HailQuery(filter=(b_col, lo, hi), projection=(names[-1],))
+    while hail.indexed_fraction(a_col) < 1.0:
+        mr.run_job(hail, qa, adaptive=mr.AdaptiveConfig(offer_rate=0.5))
+    stats = mr.run_job(hail, qb,
+                       adaptive=mr.AdaptiveConfig(offer_rate=1.0,
+                                                  max_build_per_job=1))
+    assert stats.blocks_demoted == blocks        # A evicted...
+    frac_b = hail.indexed_fraction(b_col)
+    assert 0.0 < frac_b < 1.0                    # ...B mid-re-key
+    for query in (qa, qb):
+        qp = q.plan(hail, query)
+        a = _rowset(q.read_hail(hail, query, qp))
+        b = _rowset(q.read_hail_kernels(hail, query, qp))
+        c = _rowset(q.read_hadoop(hdfs, query))
+        _assert_same(a, b, query.projection)
+        _assert_same(a, c, query.projection)
