@@ -1,0 +1,179 @@
+"""Concurrent serving bench: shared-scan batching + the hot-block cache.
+
+Q concurrent range queries over a shared replica, served two ways:
+
+* SERIAL — Q independent ``run_job(reader="kernels")`` calls (one fused
+  dispatch per split PER QUERY, Q x the scheduling overhead);
+* BATCHED — one ``HailServer.flush``: the Q queries form one shared-scan
+  batch, one fused dispatch per (split, batch), per-query masks out of the
+  kernel.
+
+Reported and regression-guarded in CI:
+
+* dispatch count: batched fused dispatches must be <= the ceil model
+  ``ceil(Q / max_batch) * splits_per_job`` (vs ``Q * splits_per_job``
+  serial) — and row counts must be identical per query;
+* makespan: both sides bridged into ``runtime/scheduler.run_schedule`` with
+  the same per-task scheduling constant (EXPERIMENTS.md's Hadoop seconds) —
+  the batched makespan must be <= 0.5x serial at Q=8 (it models ~1/Q);
+* cache: a warm re-flush must hit 100% on an unbounded cache; a
+  half-working-set budget must evict and land strictly below 100%.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+
+from benchmarks.common import uservisits_raw
+from repro.core import mapreduce as mr
+from repro.core import schema as sc
+from repro.core import upload as up
+from repro.core.cache import BlockCache
+from repro.core.query import HailQuery
+from repro.kernels import ops
+from repro.runtime import jobserver as js
+from repro.runtime.cluster import SimulatedCluster
+from repro.runtime.scheduler import Task, run_schedule
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
+                         "BENCH_kernels.json")
+
+Q = 8
+RANGES = [(7305, 7670), (0, 2000), (5000, 20000), (7, 7),
+          (123, 9999), (0, 1 << 30), (42, 4242), (1000, 8001)]
+
+
+def _sched_tasks(durs, builds, rekeys, n_queries, sched_s):
+    """Scheduler tasks with the per-task scheduling constant added — the
+    same constant on both sides, so the makespan ratio isolates the
+    fewer-tasks win (EXPERIMENTS.md, shared-scan model)."""
+    return [Task(i, sched_s + d, preferred_nodes=(), index_build_s=b,
+                 rekey_s=r, n_queries=nq)
+            for i, (d, b, r, nq) in enumerate(zip(durs, builds, rekeys,
+                                                  n_queries))]
+
+
+def shared_scan(blocks: int = 24, rows: int = 2048) -> dict:
+    cluster = mr.ClusterModel(n_nodes=6, map_slots=2)
+    _, raw = uservisits_raw(blocks=blocks, rows=rows)
+    store, _ = up.hail_upload(sc.USERVISITS, raw,
+                              ["visitDate", "sourceIP", "adRevenue"],
+                              n_nodes=cluster.n_nodes)
+    queries = [HailQuery(filter=("visitDate", lo, hi),
+                         projection=("sourceIP",)) for lo, hi in RANGES]
+    assert len(queries) == Q
+
+    # --- serial baseline: Q independent jobs (second run = jit-warm) ------
+    mr.run_job(store, queries[0], reader="kernels", cluster=cluster)
+    with ops.stats_scope() as s_serial:
+        serial = [mr.run_job(store, qq, reader="kernels", cluster=cluster)
+                  for qq in queries]
+    serial_dispatches = s_serial.dispatches["hail_read"]
+    serial_tasks = _sched_tasks(
+        [d for st in serial for d in st.split_s],
+        [b for st in serial for b in st.build_s],
+        [r for st in serial for r in (st.demote_s or [0.0] * st.n_tasks)],
+        [1] * sum(st.n_tasks for st in serial),
+        cluster.hail_sched_overhead_s)
+
+    # --- batched: one flush, one shared-scan batch ------------------------
+    server = js.HailServer(store, js.ServerConfig(max_batch=Q,
+                                                  cluster=cluster))
+    for i, qq in enumerate(queries):
+        server.submit(qq, tenant=f"tenant{i % 4}")
+    server.flush()                         # cold: compiles the Q-wide reader
+    cold_results = [t.result.n_rows for t in server.tickets[:Q]]
+    for i, qq in enumerate(queries):
+        server.submit(qq, tenant=f"tenant{i % 4}")
+    with ops.stats_scope() as s_batch:
+        fl = server.flush()                # warm: measured + all cache hits
+    batched_dispatches = s_batch.dispatches["hail_read"]
+    batched_tasks = _sched_tasks(fl.split_s, fl.build_s, fl.demote_s,
+                                 fl.batch_of_split,
+                                 cluster.hail_sched_overhead_s)
+
+    # row counts identical, batched or serial, cold or warm
+    for st, t, cold in zip(serial, server.tickets[Q:], cold_results):
+        assert st.results["n_rows"] == t.result.n_rows == cold
+
+    splits_per_job = serial[0].n_tasks
+    dispatch_model = math.ceil(Q / Q) * splits_per_job
+    sim = lambda tasks: run_schedule(          # noqa: E731
+        tasks, SimulatedCluster(cluster.n_nodes, cluster.map_slots),
+        spec_factor=None)
+    serial_sched = sim(serial_tasks)
+    batched_sched = sim(batched_tasks)
+    warm_hit_rate = (fl.cache_hits
+                     / max(fl.cache_hits + fl.cache_misses, 1))
+
+    # --- cache budget sweep: half the working set must evict --------------
+    full_bytes = store.block_cache.stats.bytes_cached
+    half = BlockCache(capacity_bytes=max(full_bytes // 2, 1)).attach(store)
+    budget_server = js.HailServer(store, js.ServerConfig(max_batch=1,
+                                                         cluster=cluster))
+    for _ in range(2):
+        for qq in queries:
+            budget_server.submit(qq)
+        budget_server.flush()
+    half_hit_rate = half.stats.hit_rate
+
+    return {
+        "server_q": Q,
+        "server_blocks": blocks,
+        "server_splits_per_job": splits_per_job,
+        "server_dispatch_model": dispatch_model,
+        "server_serial_dispatches": serial_dispatches,
+        "server_batched_dispatches": batched_dispatches,
+        "server_batch_sizes": fl.batch_sizes,
+        "server_serial_makespan_s": round(serial_sched.makespan_s, 4),
+        "server_batched_makespan_s": round(batched_sched.makespan_s, 4),
+        "server_makespan_ratio": round(
+            batched_sched.makespan_s / serial_sched.makespan_s, 4),
+        "server_serial_queries_per_s": round(
+            Q / serial_sched.makespan_s, 6),
+        "server_batched_queries_per_s": round(
+            Q / batched_sched.makespan_s, 6),
+        "server_flush_modeled_s": round(fl.modeled_s, 4),
+        "server_bytes_read": int(fl.bytes_read),
+        "server_cache_hit_rate_warm": round(warm_hit_rate, 4),
+        "server_cache_bytes_full": int(full_bytes),
+        "server_cache_hit_rate_half_budget": round(half_hit_rate, 4),
+        "server_cache_evictions_half_budget": half.stats.evictions,
+    }
+
+
+def run(quick: bool = False):
+    blocks, rows = (12, 1024) if quick else (24, 2048)
+    d = shared_scan(blocks=blocks, rows=rows)
+
+    blob = {}
+    if os.path.exists(JSON_PATH):
+        with open(JSON_PATH) as f:
+            blob = json.load(f)
+    blob.update(d)
+    with open(JSON_PATH, "w") as f:
+        json.dump(blob, f, indent=1)
+
+    return [
+        ("server_batched_flush", d["server_batched_makespan_s"] * 1e6,
+         f"dispatches={d['server_batched_dispatches']}"
+         f"/model={d['server_dispatch_model']};"
+         f"ratio={d['server_makespan_ratio']}"),
+        ("server_serial_baseline", d["server_serial_makespan_s"] * 1e6,
+         f"dispatches={d['server_serial_dispatches']};q={d['server_q']}"),
+        ("server_cache_warm", d["server_cache_hit_rate_warm"],
+         f"half_budget_rate={d['server_cache_hit_rate_half_budget']};"
+         f"evictions={d['server_cache_evictions_half_budget']}"),
+    ]
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small store for CI (12x1024 blocks)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, us, derived in run(quick=args.quick):
+        print(f"{name},{us:.1f},{derived}")

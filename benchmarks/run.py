@@ -11,6 +11,7 @@ MODULES = [
     "benchmarks.bench_splitting",   # Fig 9
     "benchmarks.bench_adaptive",    # LIAH convergence (lazy -> indexed)
     "benchmarks.bench_governor",    # budget eviction + workload-shift reconvergence
+    "benchmarks.bench_server",      # shared-scan serving + hot-block cache
     "benchmarks.bench_kernels",     # Pallas kernel harness
     "benchmarks.bench_roofline",    # roofline table from the dry-run
 ]

@@ -1,0 +1,128 @@
+"""Governor-integrated hot-block cache for the serving layer.
+
+"Overview of Caching Mechanisms to Improve Hadoop Performance" makes the
+case that INTER-JOB block caching is the dominant lever once the same data
+is read by many jobs — exactly the HailServer's regime, where concurrent
+tenants hammer the same hot replicas.  The unit cached here is the decoded
+per-split device input the record readers otherwise rebuild on every call:
+for one (replica, block-subset, filter column, projection) group, the
+gathered key column, the stacked projection columns, the bad-row mask and
+the root directories (``query._gather_replica_inputs``).  That is the
+repro's analogue of a datanode's hot-block page cache: the host-side
+gather + stack + device transfer is the per-read cost the cache removes,
+while the fused reader's dispatch count stays one per (split, batch).
+
+Policy and coherence:
+
+* capacity-bounded LRU (``capacity_bytes``) — entries are touched on hit,
+  evicted coldest-first when a put overflows the budget;
+* the cache is INVALIDATED by the store's destructive transitions:
+  ``BlockStore.commit_block_indexes`` and ``BlockStore.demote_replica``
+  drop every entry of the touched replica (its columns, checksums, root
+  directory and bad-mask layout all just changed), so a cached read can
+  never observe a half-committed replica;
+* cache traffic is still GOVERNED traffic: the record readers attribute
+  every read — hit or miss — through ``governor.attribute_read`` into the
+  store's ``AccessLog``, so the IndexGovernor's LRU eviction signal sees
+  cached reads exactly like uncached ones (a hot-but-cached index must not
+  look cold to the governor).  Hit/miss counts additionally land in
+  ``kernels.ops`` ``reader_stats`` (``cache_hits`` / ``cache_misses``).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Hashable, Optional
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0          # entries dropped for capacity
+    invalidations: int = 0      # entries dropped by store transitions
+    bytes_cached: int = 0       # current resident bytes
+    peak_bytes: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+def _nbytes(value: Any) -> int:
+    """Total device bytes of a pytree-ish tuple/dict of arrays."""
+    if isinstance(value, dict):
+        return sum(_nbytes(v) for v in value.values())
+    if isinstance(value, (tuple, list)):
+        return sum(_nbytes(v) for v in value)
+    size = getattr(value, "size", None)
+    itemsize = getattr(getattr(value, "dtype", None), "itemsize", None)
+    return int(size * itemsize) if size is not None and itemsize else 0
+
+
+class BlockCache:
+    """Capacity-bounded LRU over decoded per-split reader inputs.
+
+    Keys are ``(replica_id, ...)`` tuples — the leading replica id is the
+    invalidation handle for the store's destructive transitions.
+    ``capacity_bytes=None`` means unbounded (cache everything)."""
+
+    def __init__(self, capacity_bytes: Optional[int] = None):
+        self.capacity_bytes = capacity_bytes
+        self._entries: "collections.OrderedDict[Hashable, tuple[Any, int]]" \
+            = collections.OrderedDict()
+        self.stats = CacheStats()
+
+    def attach(self, store) -> "BlockCache":
+        """Install on a ``BlockStore`` — the readers consult
+        ``store.block_cache`` and the store invalidates on commit/demote."""
+        store.block_cache = self
+        return self
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(self, key: Hashable):
+        """-> cached value or None; counts the hit/miss."""
+        from repro.kernels import ops
+        ent = self._entries.get(key)
+        if ent is None:
+            self.stats.misses += 1
+            ops.DISPATCH_COUNTS["cache_misses"] += 1
+            return None
+        self._entries.move_to_end(key)
+        self.stats.hits += 1
+        ops.DISPATCH_COUNTS["cache_hits"] += 1
+        return ent[0]
+
+    def put(self, key: Hashable, value: Any):
+        nbytes = _nbytes(value)
+        if self.capacity_bytes is not None and nbytes > self.capacity_bytes:
+            return                       # larger than the whole budget
+        old = self._entries.pop(key, None)
+        if old is not None:
+            self.stats.bytes_cached -= old[1]
+        self._entries[key] = (value, nbytes)
+        self.stats.bytes_cached += nbytes
+        while (self.capacity_bytes is not None
+               and self.stats.bytes_cached > self.capacity_bytes):
+            _, (_, dropped) = self._entries.popitem(last=False)   # LRU out
+            self.stats.bytes_cached -= dropped
+            self.stats.evictions += 1
+        self.stats.peak_bytes = max(self.stats.peak_bytes,
+                                    self.stats.bytes_cached)
+
+    def invalidate_replica(self, replica_id: int):
+        """Drop every entry of one replica — called by the store's
+        destructive transitions (index commit / demotion)."""
+        stale = [k for k in self._entries if k[0] == replica_id]
+        for k in stale:
+            _, nbytes = self._entries.pop(k)
+            self.stats.bytes_cached -= nbytes
+            self.stats.invalidations += 1
+
+    def clear(self):
+        self.stats.invalidations += len(self._entries)
+        self._entries.clear()
+        self.stats.bytes_cached = 0

@@ -20,6 +20,15 @@ The governor closes that loop:
   ``BlockStore.commit_block_indexes`` time, so the budget can never be
   exceeded no matter who commits.
 
+* ``IndexGovernor.may_reclaim`` — claim-time eviction HYSTERESIS: a shifted
+  workload must show misses in >= ``claim_miss_jobs`` distinct jobs (the
+  requesting job included) before a claim-time demotion fires, so a
+  workload that queries once never destroys a warm index.  The job
+  boundaries come from ``AccessLog.begin_job`` (``note_job_start``), bumped
+  by every ``run_job`` and once per HailServer FLUSH (the user-visible
+  workload unit — per-batch boundaries would let one flush's own batches
+  satisfy the threshold).
+
 * ``IndexGovernor.victim`` — the LRU/hit-rate policy: among replicas whose
   clustered index does NOT serve the protected (current) filter columns,
   pick the one whose (replica, sort_key) record is least recently used,
@@ -57,11 +66,26 @@ class AccessLog:
     ``record`` is called by the record readers once per (replica, column)
     batch; the logical ``clock`` advances per call so "recently used" means
     "recently queried", independent of wall time.
+
+    A coarser JOB clock (``begin_job``, bumped once per run_job / server
+    flush) groups reads into jobs: ``miss_jobs`` remembers, per filter
+    column, WHICH distinct jobs had to full-scan for it.  That powers the
+    governor's claim-time eviction hysteresis — one job of misses is a
+    probe, repeated jobs are a workload.  Demotion forgets a replica's
+    (replica, column) records but NOT ``miss_jobs``: the evidence that a
+    column's workload keeps coming back is column-level, not replica-level.
     """
 
     def __init__(self):
         self.clock = 0
+        self.job_clock = 0
         self.counts: dict[tuple[int, str], AccessRecord] = {}
+        self.miss_jobs: dict[str, set[int]] = {}
+
+    def begin_job(self) -> int:
+        """Advance the job clock (one executor job / one server flush)."""
+        self.job_clock += 1
+        return self.job_clock
 
     def record(self, replica_id: int, col: str, n_index: int, n_full: int):
         self.clock += 1
@@ -69,6 +93,21 @@ class AccessLog:
         rec.hits += int(n_index)
         rec.misses += int(n_full)
         rec.last_used = self.clock
+        if n_full > 0:
+            self.miss_jobs.setdefault(col, set()).add(self.job_clock)
+
+    def distinct_miss_jobs(self, col: str,
+                           exclude_current: bool = False) -> int:
+        """How many distinct jobs have full-scanned for ``col`` so far.
+
+        ``exclude_current`` drops the job the clock currently points at —
+        the hysteresis gate counts the requesting job separately, and by
+        the time a server flush's second batch asks, the first batch's
+        misses have already landed under the SAME job id."""
+        jobs = self.miss_jobs.get(col, set())
+        if exclude_current:
+            return len(jobs - {self.job_clock})
+        return len(jobs)
 
     def get(self, replica_id: int, col: str) -> Optional[AccessRecord]:
         return self.counts.get((replica_id, col))
@@ -119,6 +158,16 @@ def attribute_read(store: "BlockStore", replica_id: int, col: str,
     note_read(store, replica_id, col, n_index, n_full)
 
 
+def note_job_start(store: "BlockStore") -> int:
+    """Advance the store's job clock (creating the log lazily) — called at
+    the top of every ``run_job`` and once per HailServer flush, so the
+    hysteresis counter ``distinct_miss_jobs`` means what it says."""
+    log = store.access_log
+    if log is None:
+        log = store.access_log = AccessLog()
+    return log.begin_job()
+
+
 def note_commit(store: "BlockStore", replica_id: int, col: str):
     """Commit-time recency stamp: a freshly built index counts as "just
     used" even before its first read.  Without this a zero-read new index
@@ -135,9 +184,19 @@ class GovernorConfig:
     over ALL replicas.  ``max_indexed_bytes``: same cap expressed in bytes
     (converted via the per-block PAX footprint).  Both ``None`` = unlimited
     (the governor still tracks demotions but never evicts for space).
+
+    ``claim_miss_jobs``: eviction hysteresis for the CLAIM-TIME demotion
+    path (every replica keyed elsewhere, a shifted workload wants one).
+    Demotion requires at least this many distinct jobs of misses on the
+    requesting column — the requesting job itself counts as one, so the
+    default of 2 means a column's FIRST-ever job never destroys a warm
+    index; the second distinct job does.  Budget-pressure eviction (the
+    offer doesn't fit) is not hysteresis-gated: there the alternative is
+    violating the storage budget, not merely scanning.
     """
     max_indexed_blocks: Optional[int] = None
     max_indexed_bytes: Optional[int] = None
+    claim_miss_jobs: int = 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -207,6 +266,22 @@ class IndexGovernor:
                 best, best_score = i, score
         return best
 
+    def may_reclaim(self, store: "BlockStore", col: str) -> bool:
+        """Hysteresis gate for claim-time demotion on behalf of ``col``.
+
+        True once ``col`` has accumulated misses in at least
+        ``claim_miss_jobs`` distinct jobs, counting the requesting job
+        (which is about to full-scan) as one — so a workload that queries
+        once never evicts anything, while a recurring one waits exactly one
+        extra job before re-claiming.  PRIOR jobs are counted excluding the
+        job clock's current value: a flush's later batches must not pass
+        the gate on misses their own flush just recorded.
+        """
+        log = store.access_log
+        prior = (log.distinct_miss_jobs(col, exclude_current=True)
+                 if log is not None else 0)
+        return prior + 1 >= self.config.claim_miss_jobs
+
     def note_demotion(self, replica_id: int, sort_key: str,
                       blocks_dropped: int):
         self.events.append(DemotionEvent(replica_id, sort_key,
@@ -219,9 +294,11 @@ class IndexGovernor:
 
 def govern(store: "BlockStore", *,
            max_indexed_blocks: Optional[int] = None,
-           max_indexed_bytes: Optional[int] = None) -> IndexGovernor:
+           max_indexed_bytes: Optional[int] = None,
+           claim_miss_jobs: int = 2) -> IndexGovernor:
     """Attach a budget governor to a store (the one-call entry point)."""
     gov = IndexGovernor(GovernorConfig(max_indexed_blocks=max_indexed_blocks,
-                                       max_indexed_bytes=max_indexed_bytes))
+                                       max_indexed_bytes=max_indexed_bytes,
+                                       claim_miss_jobs=claim_miss_jobs))
     store.governor = gov
     return gov

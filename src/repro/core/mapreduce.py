@@ -117,6 +117,109 @@ def _build_block_indexes(store: BlockStore, replica_id: int, block_ids,
                                       mins, sums)
 
 
+def adaptive_quantum(store: BlockStore, adaptive: "AdaptiveConfig") -> int:
+    """Per-job (or per-server-FLUSH) build budget: offer_rate of the store's
+    blocks (not of the shrinking remainder), so an unindexed store converges
+    in ceil(1/offer_rate) jobs — the EXPERIMENTS.md model.  The HailServer
+    draws ONE quantum per flush and shares it across every tenant's batch,
+    so concurrent traffic does not multiply the build tax."""
+    return min(adaptive.max_build_per_job,
+               int(np.ceil(adaptive.offer_rate * store.n_blocks)))
+
+
+def claim_adaptive_replica(store: BlockStore, adapt_col: str,
+                           quantum: int) -> tuple[Optional[int], int, float]:
+    """Pick the replica to (keep) converging toward ``adapt_col``.
+
+    When every replica is claimed by other keys, ask the governor for its
+    LRU victim, demote it, and re-claim — splits already planned keep
+    reading the demoted replica as a full scan (row-set preserved: upload
+    order + original bad mask), so demoting under a live plan is safe.
+    Gated on (a) a usable build quantum — a job that can't rebuild must not
+    destroy an index for nothing — and (b) the governor's claim-time
+    HYSTERESIS: the column must have missed in ``claim_miss_jobs`` distinct
+    jobs (this one included), so a one-off query never evicts a warm index.
+
+    Returns (replica_id or None, blocks demoted, demotion wall seconds).
+    """
+    governor = store.governor
+    adapt_rid = store.adaptive_replica_for(adapt_col)
+    demoted, d_wall = 0, 0.0
+    if (adapt_rid is None and governor is not None and quantum > 0
+            and governor.may_reclaim(store, adapt_col)):
+        victim = governor.victim(store, protect=(adapt_col,))
+        if victim is not None:
+            t_d = time.perf_counter()
+            demoted = store.demote_replica(victim)
+            d_wall = time.perf_counter() - t_d
+            adapt_rid = store.adaptive_replica_for(adapt_col)
+    return adapt_rid, demoted, d_wall
+
+
+def piggyback_build(store: BlockStore, sp: "Split", adapt_rid: int,
+                    adapt_col: str, build_budget: int
+                    ) -> tuple[int, int, float, float]:
+    """Adaptive piggyback for ONE full-scan split: this split already read
+    its blocks — sort + index an offered few of the still-unindexed ones
+    and commit them for the NEXT job (the split's own read was dispatched
+    pre-commit).  Under budget pressure, evict LRU victims until the offer
+    fits, else trim it (the budget is never exceeded).
+
+    Returns (built, demoted, build wall seconds, demotion wall seconds).
+    """
+    governor = store.governor
+    if build_budget <= 0 or sp.index_scan:
+        return 0, 0, 0.0, 0.0
+    rep = store.replicas[adapt_rid]
+    dead = store.namenode.dead
+    offer = [b for b in sp.block_ids
+             if not rep.indexed[b]
+             and int(rep.nodes[b]) not in dead][:build_budget]
+    demoted, d_wall, b_wall = 0, 0.0, 0.0
+    if offer and governor is not None:
+        room = governor.room(store)
+        while len(offer) > room:
+            victim = governor.victim(store, protect=(adapt_col,))
+            if victim is None:
+                offer = offer[:max(int(room), 0)]
+                break
+            t_d = time.perf_counter()
+            demoted += store.demote_replica(victim)
+            d_wall += time.perf_counter() - t_d
+            room = governor.room(store)
+    built = 0
+    if offer:
+        t_b = time.perf_counter()
+        built = _build_block_indexes(store, adapt_rid, offer, adapt_col,
+                                     partition_size=store.partition_size)
+        b_wall = time.perf_counter() - t_b
+    return built, demoted, b_wall, d_wall
+
+
+def failover_replan(store: BlockStore, query: q.HailQuery,
+                    pending: list, i: int):
+    """Node-death re-plan, shared by ``run_job`` and the HailServer: kill
+    the node serving ``pending[i]``, re-plan the NOT-yet-executed splits it
+    owned onto surviving replicas as per-block retry splits (falling back
+    to full scan when the lost replica held the only matching index), and
+    splice them after the surviving pending splits.  Splits dispatched
+    before the failure already ran — their results stand, exactly as
+    completed map tasks do in Hadoop.
+
+    Returns (new_pending, new_qplan, failed_node, n_retries).
+    """
+    failed_node = pending[i].node
+    store.namenode.kill_node(failed_node)
+    qplan = q.plan(store, query)
+    survivors = [s for s in pending[i:] if s.node != failed_node]
+    lost = [b for s in pending[i:] if s.node == failed_node
+            for b in s.block_ids]
+    retries = [Split(node=int(qplan.nodes[b]), block_ids=(b,),
+                     index_scan=bool(qplan.index_scan[b])) for b in lost]
+    return (pending[:i] + survivors + retries, qplan, failed_node,
+            len(retries))
+
+
 @dataclasses.dataclass(frozen=True)
 class ClusterModel:
     """Simulated-cluster constants (documented in EXPERIMENTS.md)."""
@@ -171,6 +274,9 @@ def run_job(store: BlockStore, query: q.HailQuery, *,
     walls are charged per split (``JobStats.demote_s``/``rekey_s``) and
     dropped indexes counted in ``JobStats.blocks_demoted``.
     """
+    from repro.core import governor as gvn
+
+    gvn.note_job_start(store)   # job boundary for the hysteresis counter
     qplan = q.plan(store, query)
     if store.layout != "pax":
         splits = hadoop_splits(store, qplan)
@@ -186,32 +292,16 @@ def run_job(store: BlockStore, query: q.HailQuery, *,
 
     # --- adaptive offer budget: ceil(offer_rate * unindexed), capped -------
     adapt_rid, adapt_col, build_budget = None, None, 0
-    governor = store.governor
     blocks_demoted = 0
     demote_pending_s = 0.0    # job-start demotion wall, charged to split 0
     if (adaptive is not None and store.layout == "pax"
             and query.filter is not None):
         adapt_col = query.filter_col
-        adapt_rid = store.adaptive_replica_for(adapt_col)
-        # per-job quantum: offer_rate of the job's blocks (not of the
-        # shrinking remainder), so an unindexed store converges in
-        # ceil(1/offer_rate) jobs — the EXPERIMENTS.md model
-        quantum = min(adaptive.max_build_per_job,
-                      int(np.ceil(adaptive.offer_rate * store.n_blocks)))
-        if adapt_rid is None and governor is not None and quantum > 0:
-            # workload shift with every replica claimed by other keys: ask
-            # the governor for its LRU victim, demote it, and re-claim —
-            # splits already planned keep reading the demoted replica as a
-            # full scan (row-set preserved: upload order + original bad
-            # mask), so demoting under a live plan is safe.  Gated on a
-            # usable build quantum: a job that can't rebuild must not
-            # destroy an index for nothing.
-            victim = governor.victim(store, protect=(adapt_col,))
-            if victim is not None:
-                t_d = time.perf_counter()
-                blocks_demoted += store.demote_replica(victim)
-                demote_pending_s += time.perf_counter() - t_d
-                adapt_rid = store.adaptive_replica_for(adapt_col)
+        quantum = adaptive_quantum(store, adaptive)
+        adapt_rid, claim_demoted, claim_wall = claim_adaptive_replica(
+            store, adapt_col, quantum)
+        blocks_demoted += claim_demoted
+        demote_pending_s += claim_wall
         if adapt_rid is not None and len(store.unindexed_blocks(adapt_rid)):
             build_budget = quantum
 
@@ -236,21 +326,9 @@ def run_job(store: BlockStore, query: q.HailQuery, *,
     pending = list(splits)
     while i < len(pending):
         if fail_after is not None and i == fail_after and failed_node is None:
-            # kill the node that would serve the next split; re-plan the
-            # not-yet-executed splits it owned onto surviving replicas
-            # (splits dispatched before the failure already ran — their
-            # results stand, exactly as completed map tasks do in Hadoop)
-            failed_node = pending[i].node
-            store.namenode.kill_node(failed_node)
-            qplan = q.plan(store, query)
-            survivors = [s for s in pending[i:] if s.node != failed_node]
-            lost_blocks = [b for s in pending[i:] if s.node == failed_node
-                           for b in s.block_ids]
-            retries = [Split(node=int(qplan.nodes[b]), block_ids=(b,),
-                             index_scan=bool(qplan.index_scan[b]))
-                       for b in lost_blocks]
-            rescheduled = len(retries)
-            pending = pending[:i] + survivors + retries
+            # kill the node that would serve the next split and re-plan
+            pending, qplan, failed_node, rescheduled = failover_replan(
+                store, query, pending, i)
             if i >= len(pending):
                 break
         sp = pending[i]
@@ -261,35 +339,15 @@ def run_job(store: BlockStore, query: q.HailQuery, *,
         # --- adaptive piggyback: this full-scan split already read these
         # blocks — sort + index an offered few and commit them for the
         # NEXT job (this split's own read was dispatched pre-commit) ------
-        b_wall = 0.0
         d_wall, demote_pending_s = demote_pending_s, 0.0
-        if build_budget > 0 and not sp.index_scan:
-            rep = store.replicas[adapt_rid]
-            dead = store.namenode.dead
-            offer = [b for b in sp.block_ids
-                     if not rep.indexed[b]
-                     and int(rep.nodes[b]) not in dead][:build_budget]
-            if offer and governor is not None:
-                # budget pressure: evict LRU victims until the offer fits,
-                # then trim to whatever room remains (never exceed budget)
-                room = governor.room(store)
-                while len(offer) > room:
-                    victim = governor.victim(store, protect=(adapt_col,))
-                    if victim is None:
-                        offer = offer[:max(int(room), 0)]
-                        break
-                    t_d = time.perf_counter()
-                    blocks_demoted += store.demote_replica(victim)
-                    d_wall += time.perf_counter() - t_d
-                    room = governor.room(store)
-            if offer:
-                t_b = time.perf_counter()
-                built = _build_block_indexes(
-                    store, adapt_rid, offer, adapt_col,
-                    partition_size=store.partition_size)
-                b_wall = time.perf_counter() - t_b
-                build_budget -= built
-                blocks_indexed += built
+        b_wall = 0.0
+        if build_budget > 0:
+            built, demoted, b_wall, dd_wall = piggyback_build(
+                store, sp, adapt_rid, adapt_col, build_budget)
+            build_budget -= built
+            blocks_indexed += built
+            blocks_demoted += demoted
+            d_wall += dd_wall
         build_s.append(b_wall)
         demote_s.append(d_wall)
 

@@ -17,7 +17,13 @@ hot path dispatch- and compile-free:
 * ``read_hail_kernels`` issues exactly one fused ``hail_read`` pallas_call
   per split regardless of block count, including MIXED-replica and failover
   splits (per-block ``use_index`` flags select pruned index scan vs full
-  scan inside the kernel).
+  scan inside the kernel);
+* ``read_hail_batch`` extends that to a QUERY dimension: one pallas_call
+  serves a whole batch of compatible concurrent queries (same filter
+  column, same projection) with per-query match masks — the HailServer's
+  shared-scan hot path — optionally through the store's hot-block cache
+  (``core/cache.BlockCache``), whose traffic still feeds the governor's
+  AccessLog.
 """
 from __future__ import annotations
 
@@ -256,6 +262,83 @@ def read_hail(store: BlockStore, query: HailQuery, qplan: QueryPlan,
                       bytes_read=bytes_read)
 
 
+def _gather_replica_inputs(store: BlockStore, rid: int, bsel: np.ndarray,
+                           col: str, proj_cols: tuple):
+    """Decoded reader inputs for one replica's blocks: (keys, stacked
+    projection, bad mask, root directories).
+
+    When the store carries a hot-block cache (``core/cache.BlockCache``,
+    attached by the HailServer) the gathered device arrays are served from
+    it — this host-side gather + stack is exactly the per-read work the
+    cache removes for hot splits.  The cache is invalidated per replica by
+    ``commit_block_indexes`` / ``demote_replica``, so a hit can never
+    observe a half-committed replica."""
+    cache = store.block_cache
+    key = (rid, tuple(int(b) for b in bsel), col, proj_cols)
+    if cache is not None:
+        hit = cache.get(key)
+        if hit is not None:
+            return hit
+    rep = store.replicas[rid]
+    val = (rep.cols[col][bsel],
+           jnp.stack([rep.cols[c][bsel] for c in proj_cols], axis=-1),
+           _bad_mask(store, rid)[bsel],
+           rep.mins[bsel])
+    if cache is not None:
+        cache.put(key, val)
+    return val
+
+
+def _gather_split_inputs(store: BlockStore, qplan: QueryPlan,
+                         ids: np.ndarray, col: str, proj_cols: tuple,
+                         n_queries: int = 1):
+    """Per-block kernel inputs for a split, replica-batched and restored to
+    input order with one inverse-permutation take per array (no per-group
+    ``.at[sel].set`` scatters on the hot path) — shared by the single-query
+    and shared-scan fused readers.
+
+    Attribution: each replica group is charged ``n_queries`` reads (one per
+    query sharing the scan) through ``governor.attribute_read`` — cached or
+    not, batched or not, the governor's AccessLog sees the same totals as
+    ``n_queries`` serial jobs."""
+    rids = qplan.replica_for_block[ids]
+    order, keys_p, proj_p, bad_p, mins_p, uidx_p = [], [], [], [], [], []
+    for rid in np.unique(rids):
+        sel = np.nonzero(rids == rid)[0]
+        bsel = ids[sel]
+        n_idx = int(np.asarray(qplan.index_scan[bsel], bool).sum())
+        for _ in range(n_queries):
+            gov.attribute_read(store, int(rid), col, n_idx,
+                               len(bsel) - n_idx)
+        k, p, b, m = _gather_replica_inputs(store, int(rid), bsel, col,
+                                            proj_cols)
+        order.append(sel)
+        keys_p.append(k)
+        proj_p.append(p)
+        bad_p.append(b)
+        mins_p.append(m)
+        uidx_p.append(np.asarray(qplan.index_scan[bsel], np.int32))
+    inv = np.empty(len(ids), dtype=np.int64)
+    inv[np.concatenate(order)] = np.arange(len(ids))
+    if len(order) == 1:              # single replica: concat+gather is a noop
+        return (mins_p[0], keys_p[0], proj_p[0], bad_p[0], uidx_p[0])
+    return (jnp.concatenate(mins_p, axis=0)[inv],
+            jnp.concatenate(keys_p, axis=0)[inv],
+            jnp.concatenate(proj_p, axis=0)[inv],
+            jnp.concatenate(bad_p, axis=0)[inv],
+            np.concatenate(uidx_p, axis=0)[inv])
+
+
+def _empty_read(store: BlockStore, proj_cols: tuple,
+                rows: int) -> ReadResult:
+    """Degenerate split: empty fixed-shape result."""
+    return ReadResult(
+        cols={c: jnp.zeros((0, rows), store.replicas[0].cols[c].dtype)
+              for c in proj_cols},
+        mask=jnp.zeros((0, rows), bool),
+        rows_read_frac=jnp.zeros((0,), jnp.float32), bytes_read=0)
+
+
 def read_hail_kernels(store: BlockStore, query: HailQuery, qplan: QueryPlan,
                       block_ids: Sequence[int] | None = None) -> ReadResult:
     """Kernel-backed record reader: ONE fused ``hail_read`` pallas_call per
@@ -276,42 +359,11 @@ def read_hail_kernels(store: BlockStore, query: HailQuery, qplan: QueryPlan,
            else np.asarray(block_ids))
     rows = store.rows_per_block
     proj_cols = tuple(query.projection) + (ROWID,)
-    if len(ids) == 0:                # degenerate split: empty fixed-shape result
-        return ReadResult(
-            cols={c: jnp.zeros((0, rows), store.replicas[0].cols[c].dtype)
-                  for c in proj_cols},
-            mask=jnp.zeros((0, rows), bool),
-            rows_read_frac=jnp.zeros((0,), jnp.float32), bytes_read=0)
-    rids = qplan.replica_for_block[ids]
+    if len(ids) == 0:
+        return _empty_read(store, proj_cols, rows)
 
-    # Gather per-block inputs from each block's chosen replica (host-side
-    # group + concat + inverse-permutation, same scheme as read_hail).
-    order, keys_p, proj_p, bad_p, mins_p, uidx_p = [], [], [], [], [], []
-    for rid in np.unique(rids):
-        sel = np.nonzero(rids == rid)[0]
-        bsel = ids[sel]
-        rep = store.replicas[int(rid)]
-        n_idx = int(np.asarray(qplan.index_scan[bsel], bool).sum())
-        gov.attribute_read(store, int(rid), col, n_idx, len(bsel) - n_idx)
-        order.append(sel)
-        keys_p.append(rep.cols[col][bsel])
-        proj_p.append(jnp.stack([rep.cols[c][bsel] for c in proj_cols],
-                                axis=-1))
-        bad_p.append(_bad_mask(store, int(rid))[bsel])
-        mins_p.append(rep.mins[bsel])
-        uidx_p.append(np.asarray(qplan.index_scan[bsel], np.int32))
-    inv = np.empty(len(ids), dtype=np.int64)
-    inv[np.concatenate(order)] = np.arange(len(ids))
-    if len(order) == 1:
-        keys, proj, bad = keys_p[0], proj_p[0], bad_p[0]
-        mins, uidx = mins_p[0], uidx_p[0]
-    else:
-        keys = jnp.concatenate(keys_p, axis=0)[inv]
-        proj = jnp.concatenate(proj_p, axis=0)[inv]
-        bad = jnp.concatenate(bad_p, axis=0)[inv]
-        mins = jnp.concatenate(mins_p, axis=0)[inv]
-        uidx = np.concatenate(uidx_p, axis=0)[inv]
-
+    mins, keys, proj, bad, uidx = _gather_split_inputs(store, qplan, ids,
+                                                       col, proj_cols)
     # one dispatch for the whole split; lo/hi are runtime scalars; uidx
     # stays a host array so ops' scan-mode counters cost no device sync
     mask, out, frac = ops.hail_read(mins, keys, proj, bad, uidx,
@@ -322,6 +374,58 @@ def read_hail_kernels(store: BlockStore, query: HailQuery, qplan: QueryPlan,
     return ReadResult(cols=cols, mask=mask, rows_read_frac=frac,
                       bytes_read=frac.sum() * col_bytes
                       * (1 + len(query.projection)))
+
+
+def read_hail_batch(store: BlockStore, queries: Sequence[HailQuery],
+                    qplan: QueryPlan,
+                    block_ids: Sequence[int] | None = None
+                    ) -> tuple[list[ReadResult], "int | jax.Array"]:
+    """SHARED-SCAN record reader: ONE fused pallas_call serves a whole batch
+    of compatible queries (same filter column, same projection, same plan)
+    over a split — Q concurrent range queries cost one dispatch and one
+    pass over the data instead of Q (the HailServer's hot path).
+
+    Returns (one ReadResult per query, shared physical bytes).  The per-
+    query results carry that query's own mask and rows-read fraction; the
+    projection columns are SHARED device arrays masked by the union of the
+    batch's masks, which is exact under each query's own mask (``collect``
+    touches only mask-true rows).  The second return value models the
+    PHYSICAL I/O of the shared scan — per block, the widest partition range
+    any query in the batch needed (a lazy 0-d array; no sync at dispatch).
+    """
+    from repro.kernels import ops
+
+    assert store.layout == "pax" and len(queries) >= 1
+    col = queries[0].filter_col
+    assert col is not None, "shared-scan batches need a range filter"
+    proj = tuple(queries[0].projection)
+    for qq in queries[1:]:
+        assert qq.filter_col == col and tuple(qq.projection) == proj, \
+            "batched queries must share filter column and projection"
+    ids = (np.arange(store.n_blocks) if block_ids is None
+           else np.asarray(block_ids))
+    rows = store.rows_per_block
+    proj_cols = proj + (ROWID,)
+    col_bytes = 4 * rows
+    if len(ids) == 0:
+        return [_empty_read(store, proj_cols, rows) for _ in queries], 0
+
+    mins, keys, proj_arr, bad, uidx = _gather_split_inputs(
+        store, qplan, ids, col, proj_cols, n_queries=len(queries))
+    lohi = np.asarray([[qq.filter[1], qq.filter[2]] for qq in queries],
+                      np.int32)
+    mask, out, frac = ops.hail_read_batch(mins, keys, proj_arr, bad, uidx,
+                                          lohi,
+                                          partition_size=store.partition_size)
+    cols = {c: out[..., j] for j, c in enumerate(proj_cols)}
+    results = [
+        ReadResult(cols=cols, mask=mask[..., qi],
+                   rows_read_frac=frac[:, qi],
+                   bytes_read=frac[:, qi].sum() * col_bytes
+                   * (1 + len(proj)))
+        for qi in range(len(queries))]
+    shared_bytes = frac.max(axis=1).sum() * col_bytes * (1 + len(proj))
+    return results, shared_bytes
 
 
 @functools.lru_cache(maxsize=None)

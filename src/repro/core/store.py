@@ -15,7 +15,7 @@ blocks may upload unindexed (``Replica.indexed`` all-False) and running jobs
 commit per-block clustered indexes back via ``commit_block_indexes`` — the
 replica's columns, root directory, checksums, per-block index flags and the
 namenode's Dir_rep all advance together, and query-side caches (the bad-row
-mask) are invalidated.  Planning reads this LIVE state, so repeated jobs
+mask, any attached ``core/cache.BlockCache``) are invalidated.  Planning reads this LIVE state, so repeated jobs
 converge from all-full-scan to all-index-scan.
 
 The index governor (core/governor.py) adds the REVERSE transition:
@@ -143,6 +143,9 @@ class BlockStore:
     #   the record readers' note_read attribution — persistent across jobs)
     governor: Any = None                   # governor.IndexGovernor when the
     #   store is budget-governed (commit_block_indexes enforces its budget)
+    block_cache: Any = None                # cache.BlockCache when a serving
+    #   layer caches decoded split inputs — commit_block_indexes and
+    #   demote_replica invalidate the touched replica's entries
 
     @property
     def replication(self) -> int:
@@ -249,6 +252,8 @@ class BlockStore:
         for b in bsel:
             self.namenode.update_index(int(b), int(rep.nodes[b]), sort_key)
         self.__dict__.get("_bad_mask_cache", {}).pop(replica_id, None)
+        if self.block_cache is not None:
+            self.block_cache.invalidate_replica(replica_id)
         from repro.core import governor as gv
         gv.note_commit(self, replica_id, sort_key)
         return len(bsel)
@@ -276,10 +281,17 @@ class BlockStore:
         bsel = np.nonzero(rep.indexed)[0]       # only indexed blocks moved;
         dropped = len(bsel)                     # the rest are already in
         if dropped:                             # upload order (mid-re-key)
-            perm = jnp.argsort(rep.cols[ROWID][bsel], axis=1)
-            rep.cols = {
-                c: v.at[bsel].set(jnp.take_along_axis(v[bsel], perm, axis=1))
-                for c, v in rep.cols.items()}
+            # device-side un-sort: sorting by the logical __rowid__ column
+            # IS the inverse permutation back to upload order, and it runs
+            # through the same kernels/block_sort bitonic network the build
+            # path uses — so the rekey_s wall charged to demotions is honest
+            # on TPU, not a host argsort artifact (ROADMAP item).
+            from repro.kernels import ops
+            _, unsorted, _ = ops.sort_block(
+                rep.cols[ROWID][bsel],
+                {c: v[bsel] for c, v in rep.cols.items()})
+            rep.cols = {c: v.at[bsel].set(unsorted[c])
+                        for c, v in rep.cols.items()}
             rep.checksums = {
                 c: s.at[bsel].set(jax.vmap(ck.chunk_checksums)(
                     rep.cols[c][bsel]))
@@ -292,6 +304,8 @@ class BlockStore:
         for b in range(self.n_blocks):
             self.namenode.update_index(b, int(rep.nodes[b]), None)
         self.__dict__.get("_bad_mask_cache", {}).pop(replica_id, None)
+        if self.block_cache is not None:
+            self.block_cache.invalidate_replica(replica_id)
         if self.access_log is not None:
             self.access_log.forget_replica(replica_id)
         if self.governor is not None:

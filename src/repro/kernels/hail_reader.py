@@ -1,4 +1,5 @@
-"""Fused HAIL record-reader Pallas kernel: ONE dispatch per split.
+"""Fused HAIL record-reader Pallas kernel: ONE dispatch per split — and,
+since the HailServer, ONE dispatch per (split, query-batch).
 
 This is HailSplitting (paper §4.3) applied inside the TPU runtime.  The
 per-block pipeline used to be two kernels + a Python loop — ``index_search``
@@ -14,19 +15,29 @@ Here the whole split is a single ``pallas_call`` with a 2D grid over
   grid step recomputes the block's qualifying partition range with the same
   popcount-of-(mins <= v) reduction ``index_search`` used — a VPU reduction
   is far cheaper than a second dispatch;
-* (lo, hi) live in SMEM as RUNTIME scalars, so one compiled reader serves
-  every query against the same store shape — zero per-query recompiles;
-* row tiles fully outside the partition range are PRUNED: predicated via
-  ``pl.when``, they write zeros and skip the predicate/projection work (the
-  index-scan I/O win, expressed as skipped compute per tile);
+* the query ranges live in SMEM as a RUNTIME ``(Q, 2)`` lo/hi array, so one
+  compiled reader serves every query — and every BATCH of Q concurrent
+  queries — against the same store shape, with zero per-query recompiles.
+  Q is static (it shapes the mask output), so a server batching at a fixed
+  ``max_batch`` compiles one extra variant per distinct batch size, once;
+* each grid step evaluates ALL Q range predicates against the one key tile
+  it already loaded — the shared-scan win: Q concurrent range queries over
+  a split cost one dispatch and one pass over the data instead of Q;
+* row tiles outside EVERY query's partition range are PRUNED: predicated
+  via ``pl.when``, they write zeros and skip the predicate/projection work
+  (the index-scan I/O win, expressed as skipped compute per tile);
 * per-block ``use_index`` flags let one dispatch serve MIXED splits — blocks
   whose chosen replica has a matching clustered index scan only their
   partition range, failover blocks full-scan — so the re-planned retry
   splits of a failed node run through the same fused kernel;
-* outputs: qualifying mask (bad rows excluded), masked projection, and the
-  per-block rows-read fraction feeding the I/O cost model.
+* outputs: a PER-QUERY qualifying mask (bad rows excluded), the projection
+  masked by the UNION of the query masks (rows no query wants stay zero;
+  each query recovers its own rows via its mask), and per-(block, query)
+  rows-read fractions feeding the I/O cost model.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -36,50 +47,66 @@ from jax.experimental.pallas import tpu as pltpu
 
 def _reader_kernel(lohi_ref, mins_ref, keys_ref, proj_ref, bad_ref, uidx_ref,
                    mask_ref, out_ref, frac_ref, *,
-                   partition_size: int, rows: int, row_tile: int):
+                   partition_size: int, rows: int, row_tile: int, n_q: int):
     t = pl.program_id(1)
-    lo = lohi_ref[0, 0]
-    hi = lohi_ref[0, 1]
 
-    # --- fused index_search: root-directory lookup for THIS block ----------
+    # --- fused index_search: root-directory lookup for THIS block, once per
+    # query (n_q is static — the loop unrolls into n_q VPU reductions) ------
     mins = mins_ref[...]                                     # (1, P)
-    p_first = jnp.maximum(jnp.sum(mins <= lo).astype(jnp.int32) - 1, 0)
-    p_last = jnp.maximum(jnp.sum(mins <= hi).astype(jnp.int32) - 1, 0)
     use_index = uidx_ref[0] > 0
-    r0 = jnp.where(use_index, p_first * partition_size, 0)
-    r1 = jnp.where(use_index,
-                   jnp.minimum((p_last + 1) * partition_size, rows), rows)
+    tile_lo = t * row_tile
+    r0s, r1s, lives = [], [], []
+    for qi in range(n_q):
+        lo = lohi_ref[qi, 0]
+        hi = lohi_ref[qi, 1]
+        p_first = jnp.maximum(jnp.sum(mins <= lo).astype(jnp.int32) - 1, 0)
+        p_last = jnp.maximum(jnp.sum(mins <= hi).astype(jnp.int32) - 1, 0)
+        r0 = jnp.where(use_index, p_first * partition_size, 0)
+        r1 = jnp.where(use_index,
+                       jnp.minimum((p_last + 1) * partition_size, rows), rows)
+        r0s.append(r0)
+        r1s.append(r1)
+        lives.append((tile_lo < r1) & (tile_lo + row_tile > r0))
 
-    # --- per-block rows-read fraction (once, at the first row tile) --------
+    # --- per-(block, query) rows-read fraction (once, at the first tile) ---
     @pl.when(t == 0)
     def _():
-        frac_ref[0] = (r1 - r0).astype(jnp.float32) / rows
+        for qi in range(n_q):
+            frac_ref[0, qi] = (r1s[qi] - r0s[qi]).astype(jnp.float32) / rows
 
-    # --- row-tile scan, pruned outside [r0, r1) ----------------------------
-    tile_lo = t * row_tile
-    live = (tile_lo < r1) & (tile_lo + row_tile > r0)
+    # --- row-tile scan, pruned when the tile is dead for EVERY query -------
+    live_any = lives[0]
+    for lv in lives[1:]:
+        live_any = live_any | lv
 
-    @pl.when(live)
+    @pl.when(live_any)
     def _():
         keys = keys_ref[0, :]                                # (TR,)
         r = tile_lo + jax.lax.broadcasted_iota(jnp.int32, (row_tile, 1),
                                                0)[:, 0]
-        in_range = (r >= r0) & (r < r1)
-        m = (keys >= lo) & (keys <= hi) & in_range & ~bad_ref[0, :]
-        mask_ref[0, :] = m
-        out_ref[0, :, :] = jnp.where(m[:, None], proj_ref[0, :, :], 0)
+        good = ~bad_ref[0, :]
+        any_m = jnp.zeros((row_tile,), jnp.bool_)
+        for qi in range(n_q):
+            lo = lohi_ref[qi, 0]
+            hi = lohi_ref[qi, 1]
+            in_range = (r >= r0s[qi]) & (r < r1s[qi])
+            m = (keys >= lo) & (keys <= hi) & in_range & good
+            mask_ref[0, :, qi] = m
+            any_m = any_m | m
+        out_ref[0, :, :] = jnp.where(any_m[:, None], proj_ref[0, :, :], 0)
 
-    @pl.when(~live)                                          # pruned tile
+    @pl.when(~live_any)                                      # pruned tile
     def _():
-        mask_ref[0, :] = jnp.zeros((row_tile,), jnp.bool_)
+        mask_ref[0, :, :] = jnp.zeros((row_tile, n_q), jnp.bool_)
         out_ref[0, :, :] = jnp.zeros_like(out_ref[0, :, :])
 
 
-def hail_read(mins: jax.Array, keys: jax.Array, proj: jax.Array,
-              bad: jax.Array, use_index: jax.Array, lo, hi, *,
-              partition_size: int, row_tile: int = 1024,
-              interpret: bool = True):
-    """Fused split reader — one pallas_call for all blocks of a split.
+def hail_read_batch(mins: jax.Array, keys: jax.Array, proj: jax.Array,
+                    bad: jax.Array, use_index: jax.Array, lohi: jax.Array, *,
+                    partition_size: int, row_tile: int = 1024,
+                    interpret: bool = True):
+    """Fused shared-scan reader — one pallas_call for all blocks of a split
+    AND all Q queries of a batch.
 
     mins (B, P) int32       per-block root directories (ignored where
                             ``use_index`` is 0)
@@ -87,25 +114,26 @@ def hail_read(mins: jax.Array, keys: jax.Array, proj: jax.Array,
     proj (B, R, C)          projection columns (+rowid), same replicas
     bad  (B, R) bool        bad-record positions per block
     use_index (B,) int32    1 = clustered index matches -> partition pruning
-    lo, hi                  RUNTIME scalars (python ints or traced values)
+    lohi (Q, 2) int32       RUNTIME per-query (lo, hi) ranges in SMEM
 
-    -> (mask (B, R) bool, masked proj (B, R, C), rows_read_frac (B,) f32)
+    -> (mask (B, R, Q) bool — per-query match masks,
+        proj masked by the union of the Q masks (B, R, C),
+        rows_read_frac (B, Q) f32)
     """
     b, rows = keys.shape
     c = proj.shape[2]
+    n_q = lohi.shape[0]
     tr = min(row_tile, rows)
     while rows % tr:
         tr -= 1
     n_tiles = rows // tr
-    lohi = jnp.asarray([lo, hi], jnp.int32).reshape(1, 2)
-    import functools
     kernel = functools.partial(_reader_kernel, partition_size=partition_size,
-                               rows=rows, row_tile=tr)
+                               rows=rows, row_tile=tr, n_q=n_q)
     mask, out, frac = pl.pallas_call(
         kernel,
         grid=(b, n_tiles),
         in_specs=[
-            pl.BlockSpec((1, 2), lambda i, t: (0, 0),
+            pl.BlockSpec((n_q, 2), lambda i, t: (0, 0),
                          memory_space=pltpu.SMEM),
             pl.BlockSpec((1, mins.shape[1]), lambda i, t: (i, 0)),
             pl.BlockSpec((1, tr), lambda i, t: (i, t)),
@@ -115,15 +143,31 @@ def hail_read(mins: jax.Array, keys: jax.Array, proj: jax.Array,
                          memory_space=pltpu.SMEM),
         ],
         out_specs=[
-            pl.BlockSpec((1, tr), lambda i, t: (i, t)),
+            pl.BlockSpec((1, tr, n_q), lambda i, t: (i, t, 0)),
             pl.BlockSpec((1, tr, c), lambda i, t: (i, t, 0)),
-            pl.BlockSpec((1,), lambda i, t: (i,)),
+            pl.BlockSpec((1, n_q), lambda i, t: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((b, rows), jnp.bool_),
+            jax.ShapeDtypeStruct((b, rows, n_q), jnp.bool_),
             jax.ShapeDtypeStruct((b, rows, c), proj.dtype),
-            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b, n_q), jnp.float32),
         ],
         interpret=interpret,
-    )(lohi, mins, keys, proj, bad, use_index.astype(jnp.int32))
+    )(jnp.asarray(lohi, jnp.int32), mins, keys, proj, bad,
+      use_index.astype(jnp.int32))
     return mask, out, frac
+
+
+def hail_read(mins: jax.Array, keys: jax.Array, proj: jax.Array,
+              bad: jax.Array, use_index: jax.Array, lo, hi, *,
+              partition_size: int, row_tile: int = 1024,
+              interpret: bool = True):
+    """Single-query fused split reader: the Q=1 case of ``hail_read_batch``.
+
+    -> (mask (B, R) bool, masked proj (B, R, C), rows_read_frac (B,) f32)
+    """
+    lohi = jnp.asarray([lo, hi], jnp.int32).reshape(1, 2)
+    mask, out, frac = hail_read_batch(mins, keys, proj, bad, use_index, lohi,
+                                      partition_size=partition_size,
+                                      row_tile=row_tile, interpret=interpret)
+    return mask[..., 0], out, frac[:, 0]

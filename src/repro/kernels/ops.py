@@ -1,8 +1,9 @@
 """jit'd wrappers around the Pallas kernels (+ oracle fallbacks).
 
-On this CPU container kernels run in interpret mode (correctness); on TPU
-set interpret=False.  ``use_kernels(False)`` routes everything to the
-pure-jnp oracles in ref.py.  The kernel-backed record reader
+On this CPU container kernels run in interpret mode (correctness); on a
+real TPU export ``REPRO_PALLAS_INTERPRET=0`` (or call ``set_interpret``)
+to lower through Mosaic — no code edit needed.  ``use_kernels(False)``
+routes everything to the pure-jnp oracles in ref.py.  The kernel-backed record reader
 (core.query.read_hail_kernels) calls through these wrappers and is asserted
 equivalent to the jnp reader by the system test suite, so kernel/oracle
 agreement is exercised end-to-end, not only by per-kernel allclose tests.
@@ -20,6 +21,7 @@ from __future__ import annotations
 import collections
 import contextlib
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -29,11 +31,22 @@ from repro.kernels import ref
 from repro.kernels.block_sort import bitonic_sort
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.hail_reader import hail_read as _hail_read
+from repro.kernels.hail_reader import hail_read_batch as _hail_read_batch
 from repro.kernels.index_search import index_search as _index_search
 from repro.kernels.pax_scan import pax_scan as _pax_scan
 
 _USE_KERNELS = True
-_INTERPRET = True   # CPU container: interpret mode; False on real TPUs
+
+
+def _env_interpret() -> bool:
+    """Pallas interpret mode from the environment: the real-TPU flip is
+    ``REPRO_PALLAS_INTERPRET=0`` (or false/off) — no code edit needed.
+    Default is interpret (this CPU container has no Mosaic backend)."""
+    v = os.environ.get("REPRO_PALLAS_INTERPRET", "1")
+    return v.strip().lower() not in ("0", "false", "off", "no")
+
+
+_INTERPRET = _env_interpret()
 
 DISPATCH_COUNTS: collections.Counter = collections.Counter()
 TRACE_COUNTS: collections.Counter = collections.Counter()
@@ -42,6 +55,27 @@ TRACE_COUNTS: collections.Counter = collections.Counter()
 def use_kernels(on: bool):
     global _USE_KERNELS
     _USE_KERNELS = on
+
+
+def interpret_mode() -> bool:
+    return _INTERPRET
+
+
+def set_interpret(on: bool):
+    """Flip interpret/compiled Pallas at RUNTIME (overrides the env default).
+
+    The jitted reader wrappers bake the flag in at trace time, so flipping
+    clears their jit caches — the next call retraces under the new mode.
+    """
+    global _INTERPRET
+    on = bool(on)
+    if on == _INTERPRET:
+        return
+    _INTERPRET = on
+    for fn in (_index_search_jit, _pax_scan_jit, _hail_read_jit,
+               _hail_read_ref_jit, _hail_read_batch_jit,
+               _hail_read_batch_ref_jit):
+        fn.clear_cache()
 
 
 def reset_stats():
@@ -137,6 +171,23 @@ def _hail_read_ref_jit(mins, keys, proj, bad, use_index, lo, hi,
                          partition_size=partition_size)
 
 
+@functools.partial(jax.jit, static_argnames=("partition_size",))
+def _hail_read_batch_jit(mins, keys, proj, bad, use_index, lohi,
+                         *, partition_size):
+    TRACE_COUNTS["hail_read_batch"] += 1
+    return _hail_read_batch(mins, keys, proj, bad, use_index, lohi,
+                            partition_size=partition_size,
+                            interpret=_INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("partition_size",))
+def _hail_read_batch_ref_jit(mins, keys, proj, bad, use_index, lohi,
+                             *, partition_size):
+    TRACE_COUNTS["hail_read_batch_ref"] += 1
+    return ref.hail_read_batch(mins, keys, proj, bad, use_index, lohi,
+                               partition_size=partition_size)
+
+
 def index_search(mins: jax.Array, lo, hi) -> jax.Array:
     DISPATCH_COUNTS["index_search"] += 1
     if _USE_KERNELS:
@@ -171,6 +222,31 @@ def hail_read(mins, keys, proj, bad, use_index, lo, hi, *,
     return fn(mins, keys, proj, bad, jnp.asarray(u, jnp.int32),
               jnp.asarray(lo, jnp.int32), jnp.asarray(hi, jnp.int32),
               partition_size=partition_size)
+
+
+def hail_read_batch(mins, keys, proj, bad, use_index, lohi, *,
+                    partition_size: int):
+    """Fused shared-scan reader: ONE dispatch per (split, query-batch).
+
+    ``lohi`` is the batch's (Q, 2) runtime lo/hi array; Q is a SHAPE, so a
+    server batching at a fixed ``max_batch`` compiles one variant per
+    distinct batch size (counted in ``traces``) and reuses it for every
+    later batch of that size.  The scan-mode counters charge each of the Q
+    queries with the blocks it logically scanned — serially-equivalent
+    accounting, so adaptive/governor invariant tests see the same totals
+    whether traffic was batched or not.  Per-column attribution stays the
+    record readers' job (``governor.attribute_read``, once per query)."""
+    DISPATCH_COUNTS["hail_read"] += 1
+    DISPATCH_COUNTS["hail_read_batch"] += 1
+    lohi = np.asarray(lohi, np.int32).reshape(-1, 2)
+    n_q = lohi.shape[0]
+    u = np.asarray(use_index)        # host array: counters cost no sync
+    n_idx = int(u.astype(bool).sum())
+    DISPATCH_COUNTS["index_scan_blocks"] += n_q * n_idx
+    DISPATCH_COUNTS["full_scan_blocks"] += n_q * (u.shape[0] - n_idx)
+    fn = _hail_read_batch_jit if _USE_KERNELS else _hail_read_batch_ref_jit
+    return fn(mins, keys, proj, bad, jnp.asarray(u, jnp.int32),
+              jnp.asarray(lohi), partition_size=partition_size)
 
 
 def attention(q, k, v, *, causal=True, window=None):

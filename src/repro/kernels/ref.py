@@ -48,6 +48,25 @@ def hail_read(mins, keys, proj, bad, use_index, lo, hi, *,
     return mask, out, frac
 
 
+def hail_read_batch(mins, keys, proj, bad, use_index, lohi, *,
+                    partition_size: int):
+    """Shared-scan batch oracle: Q range queries over one split at once.
+
+    lohi (Q, 2) -> (mask (B, R, Q) bool, proj masked by the union of the Q
+    masks (B, R, C), rows_read_frac (B, Q) f32) — the Q=1 slice matches
+    ``hail_read`` exactly."""
+
+    def one(lo, hi):
+        m, _, f = hail_read(mins, keys, proj, bad, use_index, lo, hi,
+                            partition_size=partition_size)
+        return m, f
+
+    mask_q, frac_q = jax.vmap(one)(lohi[:, 0], lohi[:, 1])   # (Q,B,R) (Q,B)
+    mask = jnp.moveaxis(mask_q, 0, -1)                       # (B, R, Q)
+    out = jnp.where(mask.any(axis=-1)[..., None], proj, 0)
+    return mask, out, jnp.moveaxis(frac_q, 0, -1)
+
+
 def selective_scan(delta, x, b, c, a):
     """Naive mamba1 recurrence oracle.  delta,x (B,T,D); b,c (B,T,N);
     a (D,N) negative. -> y (B,T,D), h_final (B,D,N)."""

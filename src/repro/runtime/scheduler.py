@@ -30,6 +30,12 @@ class Task:
     rekey_s: float = 0.0                # governor demotion (un-sort +
     #   re-checksum of an evicted replica) triggered by this task
     #   (JobStats.demote_s) — charged the same way as index builds
+    n_queries: int = 1                  # queries served by this task: a
+    #   HailServer shared-scan task answers a whole batch with one fused
+    #   dispatch, so Q rides on one task's scheduling overhead —
+    #   ScheduleResult.n_query_answers totals these (query, split) answers
+    #   across the schedule (distinct-query throughput is the caller's to
+    #   compute: bench_server divides Q by the makespan)
 
 
 @dataclasses.dataclass
@@ -48,6 +54,10 @@ class ScheduleResult:
     n_speculative: int
     n_failovers: int
     locality_fraction: float
+    n_query_answers: int = 0            # total (query, split) answers the
+    #   tasks produced — NOT distinct queries (a Q-wide batch over S splits
+    #   counts Q*S), so dividing by makespan gives answer throughput; for
+    #   query throughput divide the caller's distinct-query count instead
 
 
 def run_schedule(tasks: list[Task], cluster: SimulatedCluster,
@@ -140,4 +150,5 @@ def run_schedule(tasks: list[Task], cluster: SimulatedCluster,
     return ScheduleResult(
         makespan_s=makespan, runs=list(done.values()), n_speculative=n_spec,
         n_failovers=n_failover,
-        locality_fraction=local_hits / max(assignments, 1))
+        locality_fraction=local_hits / max(assignments, 1),
+        n_query_answers=sum(t.n_queries for t in tasks))

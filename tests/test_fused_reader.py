@@ -177,6 +177,36 @@ def test_failover_races_demotion_kernel_reader(uservisits_raw):
     assert refetch.results["n_rows"] == base.results["n_rows"]
 
 
+def test_batch_reader_equals_serial_reads(hail_store):
+    """Shared-scan batch reader: ONE fused dispatch serves Q queries with
+    per-query masks identical to Q serial single-query reads — including on
+    a MIXED split (index-scan and failover full-scan blocks together)."""
+    ranges = [(7305, 7670), (0, 100), (5000, 20000), (7, 7), (0, 2**30)]
+    queries = [q.HailQuery(filter=("visitDate", lo, hi),
+                           projection=("sourceIP",)) for lo, hi in ranges]
+    qp = q.plan(hail_store, Q1)
+    other = hail_store.replica_by_key("sourceIP")
+    qp.replica_for_block[1::2] = other          # half the blocks fail over
+    qp.index_scan[1::2] = False
+    with ops.stats_scope() as s:
+        batch, shared = q.read_hail_batch(hail_store, queries, qp)
+    assert s.dispatches["hail_read"] == 1       # one (split, batch) dispatch
+    assert s.dispatches["hail_read_batch"] == 1
+    for qq, res in zip(queries, batch):
+        single = q.read_hail_kernels(hail_store, qq, qp)
+        am, bm = np.asarray(single.mask), np.asarray(res.mask)
+        np.testing.assert_array_equal(am, bm)
+        for c in qq.projection:
+            np.testing.assert_array_equal(np.asarray(single.cols[c])[am],
+                                          np.asarray(res.cols[c])[bm])
+        np.testing.assert_allclose(np.asarray(single.rows_read_frac),
+                                   np.asarray(res.rows_read_frac))
+    # physical shared-scan bytes: at most the widest per-block range summed
+    fracs = np.stack([np.asarray(r.rows_read_frac) for r in batch])
+    assert float(shared) == pytest.approx(
+        fracs.max(axis=0).sum() * 4 * hail_store.rows_per_block * 2)
+
+
 def test_run_job_pipelines_splits(hail_store):
     st = mr.run_job(hail_store, Q1, splitting="hail")
     assert len(st.split_s) == st.n_tasks

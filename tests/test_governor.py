@@ -113,8 +113,10 @@ def test_two_phase_workload_shift(lazy_store, hail_store):
 def test_reclaim_when_all_replicas_claimed(lazy_store):
     """Job-start demotion path: every replica claimed by other keys and the
     budget is NOT the constraint — a shifted workload must still be able to
-    re-claim the LRU replica."""
-    gv.govern(lazy_store, max_indexed_blocks=10 * BLOCKS)
+    re-claim the LRU replica, but only once the claim-time HYSTERESIS is
+    satisfied (>= 2 distinct jobs of misses, the requesting job included):
+    a workload that queries once never destroys a warm index."""
+    gov = gv.govern(lazy_store, max_indexed_blocks=10 * BLOCKS)
     cfg = mr.AdaptiveConfig(offer_rate=1.0)
     mr.run_job(lazy_store, QA, adaptive=cfg)
     mr.run_job(lazy_store, QB, adaptive=cfg)
@@ -126,6 +128,18 @@ def test_reclaim_when_all_replicas_claimed(lazy_store):
     mr.run_job(lazy_store, QC)
     q4 = q.HailQuery(filter=("adRevenue", 0, 50_000),
                      projection=("sourceIP",))
+    # FIRST adRevenue job ever: hysteresis blocks the claim-time demotion —
+    # the one-off query full-scans and every warm index survives
+    assert not gov.may_reclaim(lazy_store, "adRevenue")
+    stats = mr.run_job(lazy_store, q4, adaptive=cfg)
+    assert stats.blocks_demoted == 0 and stats.blocks_indexed == 0
+    assert lazy_store.indexed_fraction("visitDate") == 1.0
+    # the workload comes back: its second distinct job of misses crosses
+    # the hysteresis threshold and re-claims the LRU replica (the probe
+    # advances the job clock like run_job does — prior jobs' misses count,
+    # the requesting job's own don't)
+    gv.note_job_start(lazy_store)
+    assert gov.may_reclaim(lazy_store, "adRevenue")
     stats = mr.run_job(lazy_store, q4, adaptive=cfg)
     assert stats.blocks_demoted == BLOCKS
     assert lazy_store.indexed_fraction("visitDate") == 0.0   # LRU evicted

@@ -1,0 +1,493 @@
+"""HailServer: shared-scan batching, admission control, the governor-
+integrated hot-block cache, and cache-invalidation races.
+
+The acceptance scenario (ISSUE 4): 8 concurrent mixed-tenant queries over a
+shared replica must issue ONE fused dispatch per (split, batch) — verified
+via ``reader_stats`` — and return row-sets identical to 8 serial ``run_job``
+calls, including under mid-batch demotion and node failover.  The property
+test drives randomized interleavings of flushes, adaptive commits, direct
+demotions and node failures against an uncached eager-store oracle.
+"""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import governor as gv
+from repro.core import mapreduce as mr
+from repro.core import query as q
+from repro.core import schema as sc
+from repro.core import upload as up
+from repro.core.parse import format_rows
+from repro.core.schema import ROWID
+from repro.kernels import ops
+from repro.runtime import jobserver as js
+from repro.runtime.cluster import SimulatedCluster
+from repro.runtime.scheduler import run_schedule
+
+from conftest import BLOCKS, PART
+
+RANGES = [(7305, 7670), (0, 100), (5000, 20000), (7, 7),
+          (123, 9999), (0, 1 << 30), (42, 4242), (1000, 8001)]
+QUERIES = [q.HailQuery(filter=("visitDate", lo, hi),
+                       projection=("sourceIP",)) for lo, hi in RANGES]
+
+
+@pytest.fixture()
+def served_store(uservisits_raw):
+    """FRESH indexed store per test — the server attaches a cache to it."""
+    _, raw = uservisits_raw
+    store, _ = up.hail_upload(sc.USERVISITS, raw,
+                              ["visitDate", "sourceIP", "adRevenue"],
+                              partition_size=PART, n_nodes=6)
+    return store
+
+
+@pytest.fixture()
+def lazy_store(uservisits_raw):
+    _, raw = uservisits_raw
+    store, _ = up.hail_upload(sc.USERVISITS, raw, index_columns=(),
+                              partition_size=PART, n_nodes=6, replication=3)
+    return store
+
+
+def _oracle_rows(store, query):
+    rows = q.collect(q.read_hail(store, query, q.plan(store, query)))
+    order = np.argsort(rows[ROWID])
+    return {k: v[order] for k, v in rows.items()}
+
+
+def _assert_ticket_matches(ticket, want):
+    assert ticket.status == "done"
+    got = ticket.result.rows
+    order = np.argsort(got[ROWID])
+    assert ticket.result.n_rows == len(want[ROWID])
+    for c in want:
+        np.testing.assert_array_equal(got[c][order], want[c])
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: one fused dispatch per (split, batch), row-sets == serial jobs
+# ---------------------------------------------------------------------------
+
+
+def test_shared_scan_batch_acceptance(served_store):
+    # serial oracle FIRST: 8 independent run_job calls
+    serial_rows = []
+    with ops.stats_scope() as s_serial:
+        for qq in QUERIES:
+            st_ = mr.run_job(served_store, qq, reader="kernels")
+            serial_rows.append(st_.results["n_rows"])
+    serial_dispatches = s_serial.dispatches["hail_read"]
+
+    server = js.HailServer(served_store, js.ServerConfig(max_batch=8))
+    tickets = [server.submit(qq, tenant=f"tenant{i % 3}")
+               for i, qq in enumerate(QUERIES)]
+    with ops.stats_scope() as s:
+        fl = server.flush()
+    # all 8 compatible queries formed ONE batch: one fused dispatch per
+    # (split, batch), 8x fewer than the serial jobs issued
+    assert fl.n_batches == 1 and fl.batch_sizes == [8]
+    assert s.dispatches["hail_read"] == fl.n_splits
+    assert s.dispatches["hail_read_batch"] == fl.n_splits
+    assert serial_dispatches == 8 * fl.n_splits
+    assert s.dispatches["pax_scan"] == 0 and s.dispatches["index_search"] == 0
+    # row-sets identical to the serial jobs
+    for ticket, qq, n_serial in zip(tickets, QUERIES, serial_rows):
+        assert ticket.result.n_rows == n_serial
+        _assert_ticket_matches(ticket, _oracle_rows(served_store, qq))
+    assert fl.n_queries == 8 and fl.bytes_read > 0
+
+
+def test_batch_width_compiles_once(served_store):
+    """A fixed max_batch means ONE reader variant: later flushes with new
+    ranges at the same width must not retrace."""
+    server = js.HailServer(served_store, js.ServerConfig(max_batch=4))
+    with ops.stats_scope() as s:
+        for shift in (0, 1, 2):
+            for lo, hi in RANGES[:4]:
+                server.submit(q.HailQuery(
+                    filter=("visitDate", lo + shift, hi + shift),
+                    projection=("sourceIP",)))
+            fl = server.flush()
+            assert fl.batch_sizes == [4]
+    assert s.traces["hail_read_batch"] <= 1
+    assert s.dispatches["hail_read"] == 3 * fl.n_splits
+
+
+def test_admission_control_per_tenant(served_store):
+    cfg = js.ServerConfig(max_pending_per_tenant=2, max_pending_total=3)
+    server = js.HailServer(served_store, cfg)
+    server.submit(QUERIES[0], tenant="a")
+    server.submit(QUERIES[1], tenant="a")
+    with pytest.raises(js.AdmissionError):
+        server.submit(QUERIES[2], tenant="a")       # tenant quota
+    server.submit(QUERIES[2], tenant="b")
+    with pytest.raises(js.AdmissionError):
+        server.submit(QUERIES[3], tenant="c")       # global quota
+    assert server.pending_count() == 3
+    server.flush()
+    assert server.pending_count() == 0
+    server.submit(QUERIES[3], tenant="a")           # quota freed by flush
+    fl = server.flush()
+    assert fl.n_queries == 1
+
+
+def test_incompatible_queries_split_batches(served_store):
+    """Different filter columns (or projections) cannot share a scan — they
+    form separate batches; an unfiltered query runs as a singleton."""
+    server = js.HailServer(served_store, js.ServerConfig(max_batch=8))
+    server.submit(QUERIES[0])
+    server.submit(QUERIES[1])
+    server.submit(q.HailQuery(filter=("sourceIP", 0, 1 << 30),
+                              projection=("visitDate",)))
+    server.submit(q.HailQuery(filter=None, projection=("sourceIP",)))
+    fl = server.flush()
+    assert fl.n_batches == 3 and sorted(fl.batch_sizes) == [1, 1, 2]
+    for t in server.tickets:
+        _assert_ticket_matches(t, _oracle_rows(served_store, t.query))
+
+
+def test_flush_under_failover(served_store):
+    """Mid-flush node death: lost splits re-plan to per-block retries (same
+    path as run_job), every retry still goes through the fused batch reader,
+    and row-sets stay exact."""
+    server = js.HailServer(served_store, js.ServerConfig(max_batch=8))
+    tickets = [server.submit(qq) for qq in QUERIES]
+    with ops.stats_scope() as s:
+        fl = server.flush(fail_node_at=0.5)
+    assert fl.rescheduled_tasks > 0
+    assert s.dispatches["hail_read"] == fl.n_splits   # retries fused too
+    assert not served_store.namenode.dead             # revived after flush
+    for ticket, qq in zip(tickets, QUERIES):
+        _assert_ticket_matches(ticket, _oracle_rows(served_store, qq))
+
+
+# ---------------------------------------------------------------------------
+# Shared adaptive quantum + mid-batch demotion
+# ---------------------------------------------------------------------------
+
+
+def test_shared_build_quantum_across_tenants(lazy_store):
+    """Concurrent tenants share ONE offer quantum per flush: 4 queries in a
+    batch advance convergence by one job's worth, not 4 jobs' worth."""
+    cfg = mr.AdaptiveConfig(offer_rate=0.5)
+    quantum = mr.adaptive_quantum(lazy_store, cfg)
+    server = js.HailServer(lazy_store, js.ServerConfig(max_batch=4,
+                                                       adaptive=cfg))
+    for i in range(4):
+        server.submit(QUERIES[i], tenant=f"t{i}")
+    fl = server.flush()
+    assert fl.blocks_indexed == quantum               # one quantum, shared
+    assert lazy_store.indexed_fraction("visitDate") == quantum / BLOCKS
+    # convergence model unchanged: ceil(1/offer_rate) flushes to 1.0
+    for _ in range(math.ceil(1 / cfg.offer_rate) - 1):
+        for i in range(4):
+            server.submit(QUERIES[i], tenant=f"t{i}")
+        server.flush()
+    assert lazy_store.indexed_fraction("visitDate") == 1.0
+    # converged: the next flush is pure index scan, zero build
+    for i in range(4):
+        server.submit(QUERIES[i], tenant=f"t{i}")
+    with ops.stats_scope() as s:
+        fl = server.flush()
+    assert fl.blocks_indexed == 0
+    assert s.dispatches["full_scan_blocks"] == 0
+    for t in server.tickets:
+        _assert_ticket_matches(t, _oracle_rows(lazy_store, t.query))
+
+
+def test_mid_batch_demotion_keeps_rowsets_exact(lazy_store, served_store):
+    """Budget pressure DURING a flush: the shifted batch's builds evict the
+    old column's replica mid-batch, invalidating its cache entries — and
+    every ticket of the flush still matches the eager oracle."""
+    gv.govern(lazy_store, max_indexed_blocks=BLOCKS)
+    cfg = mr.AdaptiveConfig(offer_rate=1.0)
+    server = js.HailServer(lazy_store, js.ServerConfig(max_batch=4,
+                                                       adaptive=cfg))
+    for i in range(4):
+        server.submit(QUERIES[i], tenant=f"t{i}")
+    server.flush()                                    # converge visitDate
+    assert lazy_store.indexed_fraction("visitDate") == 1.0
+
+    # warm the cache on the victim replica (pure index scans, converged —
+    # no adaptive work left on visitDate) so the demotion must invalidate
+    for i in range(4):
+        server.submit(QUERIES[i], tenant=f"t{i}")
+    warm = server.flush()
+    assert warm.blocks_indexed == 0 and warm.blocks_demoted == 0
+    assert len(server.cache) > 0
+    inval0 = server.cache.stats.invalidations
+
+    shift = [q.HailQuery(filter=("sourceIP", lo, hi),
+                         projection=("visitDate",))
+             for lo, hi in [(0, 1 << 30), (1 << 10, 1 << 20),
+                            (0, 1 << 16), (5, 5)]]
+    for i, qq in enumerate(shift):
+        server.submit(qq, tenant=f"t{i}")
+    fl = server.flush()
+    assert fl.blocks_demoted == BLOCKS                # mid-batch eviction
+    assert fl.blocks_indexed > 0                      # re-keyed for the shift
+    assert lazy_store.total_indexed_blocks() <= BLOCKS
+    assert server.cache.stats.invalidations > inval0  # cache stayed coherent
+    for t in server.tickets:
+        _assert_ticket_matches(t, _oracle_rows(served_store, t.query))
+    # old workload still answers exactly (full scan over demoted replica)
+    server.submit(QUERIES[0])
+    server.flush()
+    _assert_ticket_matches(server.tickets[-1],
+                           _oracle_rows(served_store, QUERIES[0]))
+
+
+def test_row_ascii_store_served_via_hadoop_reader(uservisits_raw):
+    """A row-layout (Hadoop baseline) store is servable too: queries run as
+    singleton batches through read_hadoop, results equal to run_job."""
+    _, raw = uservisits_raw
+    store, _ = up.hdfs_upload(sc.USERVISITS, raw, replication=3, n_nodes=6)
+    server = js.HailServer(store, js.ServerConfig(max_batch=8))
+    t_filtered = server.submit(QUERIES[0])
+    t_all = server.submit(q.HailQuery(filter=None, projection=("sourceIP",)))
+    fl = server.flush()
+    assert fl.n_batches == 2 and fl.batch_sizes == [1, 1]
+    for t in (t_filtered, t_all):
+        base = mr.run_job(store, t.query)
+        assert t.result.n_rows == base.results["n_rows"] > 0
+        got = q.collect(q.read_hadoop(store, t.query))
+        order, gorder = (np.argsort(got[ROWID]),
+                         np.argsort(t.result.rows[ROWID]))
+        for c in t.query.projection + (ROWID,):
+            np.testing.assert_array_equal(got[c][order],
+                                          t.result.rows[c][gorder])
+
+
+def test_one_flush_cannot_satisfy_its_own_hysteresis(lazy_store):
+    """The governor's job boundary is the FLUSH, not the batch: a column
+    seen for the first time — however many batches its flush takes — must
+    not demote a warm index; the SECOND flush may."""
+    gv.govern(lazy_store, max_indexed_blocks=10 * BLOCKS)
+    cfg = mr.AdaptiveConfig(offer_rate=1.0)
+    for col in ("visitDate", "sourceIP", "adRevenue"):
+        mr.run_job(lazy_store, q.HailQuery(filter=(col, 0, 1 << 30),
+                                           projection=("duration",)),
+                   adaptive=cfg)
+    assert all(r.sort_key is not None for r in lazy_store.replicas)
+    server = js.HailServer(lazy_store, js.ServerConfig(max_batch=2,
+                                                       adaptive=cfg))
+    # 3 incompatible duration queries -> 2+ batches in ONE first-ever flush
+    server.submit(q.HailQuery(filter=("duration", 0, 4000),
+                              projection=("sourceIP",)))
+    server.submit(q.HailQuery(filter=("duration", 0, 4000),
+                              projection=("visitDate",)))
+    server.submit(q.HailQuery(filter=("duration", 7, 7),
+                              projection=("sourceIP",)))
+    fl = server.flush()
+    assert fl.n_batches >= 2
+    assert fl.blocks_demoted == 0                 # one-off workload: no harm
+    assert all(lazy_store.indexed_fraction(c) == 1.0
+               for c in ("visitDate", "sourceIP", "adRevenue"))
+    # the workload returns: the second distinct flush (a NEW job boundary,
+    # so the first flush's misses now count as prior) crosses the threshold
+    server.submit(q.HailQuery(filter=("duration", 0, 4000),
+                              projection=("sourceIP",)))
+    fl = server.flush()
+    assert fl.blocks_demoted == BLOCKS
+    assert lazy_store.indexed_fraction("duration") == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Governor-integrated cache
+# ---------------------------------------------------------------------------
+
+
+def test_cache_traffic_feeds_access_log(served_store):
+    """Cached reads are still governed traffic: the second (all-hit) flush
+    advances the AccessLog exactly like the first (all-miss) one."""
+    server = js.HailServer(served_store, js.ServerConfig(max_batch=8))
+    rid = served_store.replica_for("visitDate")
+
+    def log_hits():
+        rec = served_store.access_log.get(rid, "visitDate") \
+            if served_store.access_log else None
+        return (rec.hits, rec.last_used) if rec else (0, 0)
+
+    for qq in QUERIES:
+        server.submit(qq)
+    server.flush()
+    hits1, used1 = log_hits()
+    for qq in QUERIES:
+        server.submit(qq)
+    fl2 = server.flush()
+    hits2, used2 = log_hits()
+    assert fl2.cache_misses == 0 and fl2.cache_hits == fl2.n_splits
+    assert hits2 - hits1 == hits1 > 0        # same attribution, cached
+    assert used2 > used1                     # recency advanced: not LRU-cold
+
+
+def test_cache_capacity_lru_eviction(served_store):
+    """A capacity below the working set forces LRU evictions and lowers the
+    hit rate; an unbounded cache replays the whole flush from memory."""
+    big = js.HailServer(served_store, js.ServerConfig(max_batch=1))
+    for qq in QUERIES[:4]:
+        big.submit(qq)
+    big.flush()
+    full_bytes = big.cache.stats.bytes_cached
+    assert full_bytes > 0
+
+    # an explicit cache_bytes budget replaces the attached unbounded cache
+    # (a silently inherited unbounded cache would make the budget a no-op)
+    server = js.HailServer(served_store, js.ServerConfig(
+        max_batch=1, cache_bytes=full_bytes // 2))
+    small_cache = server.cache
+    assert small_cache is served_store.block_cache is not big.cache
+    assert small_cache.capacity_bytes == full_bytes // 2
+    for _ in range(2):
+        for qq in QUERIES[:4]:
+            server.submit(qq)
+        server.flush()
+    assert small_cache.stats.evictions > 0
+    assert small_cache.stats.bytes_cached <= full_bytes // 2
+    assert small_cache.stats.hit_rate < 1.0
+    # same budget again: the existing cache is REUSED, not reset
+    again = js.HailServer(served_store, js.ServerConfig(
+        cache_bytes=full_bytes // 2))
+    assert again.cache is small_cache
+
+
+def test_commit_and_demote_invalidate_cache(lazy_store):
+    """The store's destructive transitions drop the touched replica's cache
+    entries (a cached read can never observe a half-committed replica)."""
+    server = js.HailServer(lazy_store, js.ServerConfig(max_batch=2))
+    server.submit(QUERIES[0])
+    server.submit(QUERIES[1])
+    server.flush()
+    assert len(server.cache) > 0
+    mr._build_block_indexes(lazy_store, 0, list(range(BLOCKS)), "visitDate",
+                            partition_size=PART)
+    assert server.cache.stats.invalidations > 0
+    inval = server.cache.stats.invalidations
+    server.submit(QUERIES[0])
+    server.flush()                            # re-fills from the new state
+    _assert_ticket_matches(server.tickets[-1],
+                           _oracle_rows(lazy_store, QUERIES[0]))
+    lazy_store.demote_replica(0)
+    assert server.cache.stats.invalidations > inval
+    server.submit(QUERIES[0])
+    server.flush()
+    _assert_ticket_matches(server.tickets[-1],
+                           _oracle_rows(lazy_store, QUERIES[0]))
+
+
+# ---------------------------------------------------------------------------
+# Scheduler bridge: shared-scan throughput
+# ---------------------------------------------------------------------------
+
+
+def test_flush_tasks_throughput_bridge(served_store):
+    server = js.HailServer(served_store, js.ServerConfig(max_batch=8))
+    for qq in QUERIES:
+        server.submit(qq)
+    fl = server.flush()
+    tasks = js.flush_tasks(fl)
+    assert len(tasks) == fl.n_splits
+    assert all(t.n_queries == 8 for t in tasks)
+    res = run_schedule(tasks, SimulatedCluster(n_nodes=4, map_slots=2),
+                       spec_factor=None)
+    # (query, split) answers, not distinct queries: Q * S
+    assert res.n_query_answers == 8 * fl.n_splits
+    assert res.makespan_s > 0
+
+
+# ---------------------------------------------------------------------------
+# Pallas interpret-mode runtime flag (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_interpret_env_flag_parsing(monkeypatch):
+    for raw, want in [("1", True), ("true", True), ("", True),
+                      ("0", False), ("false", False), ("OFF", False),
+                      ("No", False)]:
+        monkeypatch.setenv("REPRO_PALLAS_INTERPRET", raw)
+        assert ops._env_interpret() is want, raw
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET")
+    assert ops._env_interpret() is True      # container default: interpret
+
+
+def test_set_interpret_flips_and_clears_caches(served_store):
+    assert ops.interpret_mode() is True
+    try:
+        ops.set_interpret(False)             # the real-TPU flip, at runtime
+        assert ops.interpret_mode() is False
+    finally:
+        ops.set_interpret(True)
+    assert ops.interpret_mode() is True
+    # reader still correct after the cache-clearing round trip
+    qp = q.plan(served_store, QUERIES[0])
+    a = q.read_hail(served_store, QUERIES[0], qp)
+    b = q.read_hail_kernels(served_store, QUERIES[0], qp)
+    np.testing.assert_array_equal(np.asarray(a.mask), np.asarray(b.mask))
+
+
+# ---------------------------------------------------------------------------
+# Property test: cache-invalidation races (commits, demotions, failures)
+# ---------------------------------------------------------------------------
+
+P_ROWS, P_PART = 256, 64
+VMAX = 1 << 20
+
+
+def _make_store_pair(seed, blocks=3):
+    schema = sc.Schema("srv", tuple(sc.Column(f"c{i}") for i in range(3)))
+    r = np.random.default_rng(seed)
+    cols = {c.name: r.integers(0, VMAX, P_ROWS * blocks, dtype=np.int32)
+            for c in schema.columns}
+    raw = format_rows(schema, cols, bad_fraction=0.01,
+                      seed=seed + 1).reshape(blocks, P_ROWS, -1)
+    eager, _ = up.hail_upload(schema, raw, ["c0", "c1"],
+                              partition_size=P_PART, n_nodes=4)
+    lazy, _ = up.hail_upload(schema, raw, index_columns=(), replication=2,
+                             partition_size=P_PART, n_nodes=4)
+    return schema, eager, lazy
+
+
+@settings(max_examples=2, deadline=None)
+@given(st.integers(0, 2**31 - 1),                 # data + schedule seed
+       st.sampled_from([0.5, 1.0]),               # offer rate
+       st.integers(2, 4))                         # queries per flush
+def test_server_matches_uncached_oracle_under_races(seed, offer_rate, n_q):
+    """Randomized interleavings of server flushes, adaptive index commits,
+    direct demotions and node failures: every ticket of every flush must
+    equal the UNCACHED single-query oracle (fresh read over an eager,
+    never-mutated store) — the cache may never serve stale replica state."""
+    schema, eager, lazy = _make_store_pair(seed)
+    gv.govern(lazy, max_indexed_blocks=lazy.n_blocks)
+    cfg = mr.AdaptiveConfig(offer_rate=offer_rate)
+    server = js.HailServer(lazy, js.ServerConfig(max_batch=4, adaptive=cfg))
+    rng = np.random.default_rng(seed ^ 0x5eed)
+    verified = 0
+    for step in range(4):
+        col = ("c0", "c1")[int(rng.integers(0, 2))]
+        qs = []
+        for _ in range(n_q):
+            lo, hi = sorted(rng.integers(0, VMAX, 2).tolist())
+            qs.append(q.HailQuery(filter=(col, int(lo), int(hi)),
+                                  projection=("c2",)))
+            server.submit(qs[-1], tenant=f"t{int(rng.integers(0, 3))}")
+        action = int(rng.integers(0, 4))
+        if action == 0:                        # race: node death mid-flush
+            server.flush(fail_node_at=float(rng.uniform(0.1, 0.9)))
+        elif action == 1:                      # race: serial adaptive job
+            mr.run_job(lazy, qs[0], adaptive=cfg)   # commits mid-workload
+            server.flush()
+        elif action == 2:                      # race: direct demotion
+            keyed = [i for i, r in enumerate(lazy.replicas)
+                     if r.sort_key is not None and r.indexed.any()]
+            if keyed:
+                lazy.demote_replica(keyed[0])
+            server.flush()
+        else:
+            server.flush()
+        for t in server.tickets[verified:]:    # results are immutable —
+            _assert_ticket_matches(t, _oracle_rows(eager, t.query))
+        verified = len(server.tickets)         # verify each exactly once
+        assert lazy.total_indexed_blocks() <= lazy.n_blocks
