@@ -1,0 +1,170 @@
+"""Corruption-resilience bench: clean-path verify tax + detect/repair cost.
+
+Three regression-guarded questions (EXPERIMENTS.md, "Corruption
+resilience"):
+
+* CLEAN-PATH TAX — read-path checksum verification is amortized to
+  BlockCache fills, so a warm-cache ``HailServer.flush`` re-verifies
+  nothing: its scheduler-bridged makespan with ``verify_reads=True`` must
+  stay within 10% of ``verify_reads=False`` (the ISSUE's acceptance
+  bound), and the warm flush must issue ZERO ``verify_blocks`` dispatches;
+* CORRECTNESS UNDER CORRUPTION — a bit-flipped replica block must not
+  change any query's row count (detect -> quarantine -> re-plan to a
+  healthy replica), and all-replicas corruption must surface
+  ``UnrecoverableDataError``, never silent wrong rows;
+* REPAIR COST + FIDELITY — ``repair_blocks`` rebuilds the victim from a
+  healthy replica under the victim's own sort order; the modeled cost is
+  the detection job's latency plus the rewritten bytes over the paper's
+  100MB/s disk, and the repaired replica's root directory must equal a
+  fresh eager upload's (the clustered index survives repair).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import uservisits_raw
+from repro.core import mapreduce as mr
+from repro.core import schema as sc
+from repro.core import upload as up
+from repro.core.fault import FaultInjector, UnrecoverableDataError
+from repro.core.query import HailQuery
+from repro.kernels import ops
+from repro.runtime import jobserver as js
+from repro.runtime.cluster import SimulatedCluster
+from repro.runtime.scheduler import Task, run_schedule
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
+                         "BENCH_kernels.json")
+
+KEYS = ["visitDate", "sourceIP", "adRevenue"]
+RANGES = [(7305, 7670), (8000, 9500), (7000, 12000), (9000, 9001)]
+
+
+def _warm_flush_makespan(store, queries, cluster):
+    """Scheduler-bridged makespan of a WARM-cache flush (same per-task
+    scheduling constant as bench_server, so ratios isolate the verify
+    tax), plus the verify dispatches that flush issued."""
+    server = js.HailServer(store, js.ServerConfig(max_batch=len(queries),
+                                                  cluster=cluster))
+    for qq in queries:
+        server.submit(qq)
+    server.flush()                          # cold: compiles + fills cache
+    for qq in queries:
+        server.submit(qq)
+    with ops.stats_scope() as s:
+        fl = server.flush()                 # warm: all hits
+    tasks = [Task(i, cluster.hail_sched_overhead_s + d, preferred_nodes=(),
+                  index_build_s=b, rekey_s=r, n_queries=nq)
+             for i, (d, b, r, nq) in enumerate(zip(
+                 fl.split_s, fl.build_s, fl.demote_s, fl.batch_of_split))]
+    sched = run_schedule(tasks, SimulatedCluster(cluster.n_nodes,
+                                                 cluster.map_slots),
+                         spec_factor=None)
+    rows = [t.result.n_rows for t in server.tickets[-len(queries):]]
+    return sched.makespan_s, s.dispatches["verify_blocks"], rows
+
+
+def corruption_resilience(blocks: int = 24, rows: int = 2048) -> dict:
+    cluster = mr.ClusterModel(n_nodes=6, map_slots=2)
+    _, raw = uservisits_raw(blocks=blocks, rows=rows)
+    mk = lambda: up.hail_upload(sc.USERVISITS, raw, KEYS,  # noqa: E731
+                                n_nodes=cluster.n_nodes)[0]
+    queries = [HailQuery(filter=("visitDate", lo, hi),
+                         projection=("sourceIP",)) for lo, hi in RANGES]
+
+    # --- clean path: verify-on warm flush vs verify-off -------------------
+    son, soff = mk(), mk()
+    soff.verify_reads = False
+    on_makespan, on_verifies, on_rows = _warm_flush_makespan(
+        son, queries, cluster)
+    off_makespan, _, off_rows = _warm_flush_makespan(soff, queries, cluster)
+    assert on_rows == off_rows
+    overhead = on_makespan / off_makespan
+
+    # --- corruption: detect -> quarantine -> re-plan -> same rows ---------
+    clean = mr.run_job(son, queries[0], cluster=cluster)
+    victim_block = blocks // 2
+    FaultInjector(son, seed=3).corrupt_chunk(0, victim_block, "visitDate")
+    son.block_cache.clear()                # cold fills -> read-path detect
+    detect = mr.run_job(son, queries[0], cluster=cluster)
+    rows_ok = (detect.results["n_rows"] == clean.results["n_rows"]
+               and detect.blocks_quarantined == 1)
+
+    # --- repair: cost model + index fidelity ------------------------------
+    rs = son.repair_blocks()
+    repair_modeled = detect.modeled_s + rs.bytes_rewritten / cluster.disk_bw
+    fresh = mk()
+    index_ok = (rs.blocks_repaired == 1 and son.verify_block(0, victim_block)
+                and np.array_equal(np.asarray(son.replicas[0].mins),
+                                   np.asarray(fresh.replicas[0].mins))
+                and np.array_equal(
+                    np.asarray(son.replicas[0].cols["visitDate"]),
+                    np.asarray(fresh.replicas[0].cols["visitDate"])))
+
+    # --- all replicas corrupt: typed failure, never wrong rows ------------
+    sdead = mk()
+    FaultInjector(sdead, seed=4).corrupt_replicas(
+        victim_block, sdead.replication, "visitDate")
+    try:
+        mr.run_job(sdead, queries[0], cluster=cluster)
+        unrecoverable_detected = False
+    except UnrecoverableDataError:
+        unrecoverable_detected = True
+
+    return {
+        "fault_blocks": blocks,
+        "fault_verify_overhead_ratio": round(overhead, 4),
+        "fault_warm_verify_dispatches": int(on_verifies),
+        "fault_verify_on_makespan_s": round(on_makespan, 4),
+        "fault_verify_off_makespan_s": round(off_makespan, 4),
+        "fault_rows_under_corruption_ok": bool(rows_ok),
+        "fault_blocks_quarantined": int(detect.blocks_quarantined),
+        "fault_corrupt_retries": int(detect.corrupt_retries),
+        "fault_blocks_repaired": int(rs.blocks_repaired),
+        "fault_bytes_rewritten": int(rs.bytes_rewritten),
+        "fault_detect_repair_modeled_s": round(repair_modeled, 4),
+        "fault_repair_index_preserved": bool(index_ok),
+        "fault_unrecoverable_detected": bool(unrecoverable_detected),
+    }
+
+
+def run(quick: bool = False):
+    blocks, rows = (12, 1024) if quick else (24, 2048)
+    d = corruption_resilience(blocks=blocks, rows=rows)
+
+    blob = {}
+    if os.path.exists(JSON_PATH):
+        with open(JSON_PATH) as f:
+            blob = json.load(f)
+    blob.update(d)
+    with open(JSON_PATH, "w") as f:
+        json.dump(blob, f, indent=1)
+
+    return [
+        ("fault_verify_tax", d["fault_verify_overhead_ratio"],
+         f"warm_verify_dispatches={d['fault_warm_verify_dispatches']};"
+         f"on={d['fault_verify_on_makespan_s']}s"
+         f"/off={d['fault_verify_off_makespan_s']}s"),
+        ("fault_detect_repair", d["fault_detect_repair_modeled_s"] * 1e6,
+         f"quarantined={d['fault_blocks_quarantined']};"
+         f"repaired={d['fault_blocks_repaired']};"
+         f"bytes={d['fault_bytes_rewritten']};"
+         f"rows_ok={d['fault_rows_under_corruption_ok']};"
+         f"index_preserved={d['fault_repair_index_preserved']}"),
+        ("fault_unrecoverable", float(d["fault_unrecoverable_detected"]),
+         "all-R corruption raises UnrecoverableDataError"),
+    ]
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small store for CI (12x1024 blocks)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, us, derived in run(quick=args.quick):
+        print(f"{name},{us:.1f},{derived}")

@@ -122,6 +122,19 @@ class BlockCache:
             self.stats.bytes_cached -= nbytes
             self.stats.invalidations += 1
 
+    def invalidate_blocks(self, replica_id: int, block_ids):
+        """Drop only the entries whose gathered block set intersects
+        ``block_ids`` — quarantine/repair touch single blocks, so evicting
+        the whole replica would throw away every hot split for one bad
+        block.  Keys are ``(replica_id, block_tuple, ...)``."""
+        bad = {int(b) for b in block_ids}
+        stale = [k for k in self._entries
+                 if k[0] == replica_id and bad.intersection(k[1])]
+        for k in stale:
+            _, nbytes = self._entries.pop(k)
+            self.stats.bytes_cached -= nbytes
+            self.stats.invalidations += 1
+
     def clear(self):
         self.stats.invalidations += len(self._entries)
         self._entries.clear()

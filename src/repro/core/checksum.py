@@ -44,3 +44,20 @@ def verify_block(cols: dict[str, jax.Array], sums: dict[str, jax.Array]) -> jax.
     for k in sorted(cols):
         ok &= verify(cols[k], sums[k]).all()
     return ok
+
+
+def verify_blocks(data: jax.Array, sums: jax.Array) -> jax.Array:
+    """Batched read-path verify: data (C, B, rows), sums (C, B, chunks)
+    -> bool (C, B), True where EVERY chunk of (col, block) matches.
+    All uservisits columns are int32, so a multi-column stack is free."""
+    per = jax.vmap(jax.vmap(lambda d, s: (chunk_checksums(d) == s).all()))
+    return per(data, sums)
+
+
+def verify_root(mins: jax.Array, sorted_keys: jax.Array,
+                partition_size: int) -> jax.Array:
+    """Root-directory consistency: mins (B, P) vs sorted key column
+    (B, rows) -> bool (B,).  The root directory is NOT checksummed (it is
+    derived state), so a corrupt/stale directory is caught by re-deriving
+    the partition minima from the (checksum-verified) key column."""
+    return (mins == sorted_keys[:, ::partition_size]).all(axis=1)

@@ -1,0 +1,189 @@
+"""Seeded fault injection + the typed corruption-error vocabulary.
+
+HAIL recomputes per-replica checksums precisely because HDFS's corruption
+story must survive physically different replicas (paper §3.2) — each
+replica's sort order differs, so each carries its own chunk checksums.
+This module is the adversary that proves the read path actually *uses*
+them: a deterministic ``FaultInjector`` flips bits in PAX columns,
+scrambles root directories, and truncates checksum arrays of chosen
+(replica, block)s, so tests and benchmarks can drive the whole
+detect → quarantine → re-plan → repair pipeline end to end.
+
+Design points:
+
+* **Deterministic** — every fault is drawn from a seeded
+  ``np.random.default_rng``; the same seed replays the same fault
+  sequence, so chaos tests shrink and failures reproduce.
+* **Functional corruption** — faults rebind ``Replica.cols[...]`` /
+  ``mins`` / ``checksums`` via ``.at[...].set`` updates.  Lazy stores
+  alias column arrays across replicas until a commit diverges them;
+  a functional update corrupts ONLY the targeted replica, exactly like
+  a single datanode's disk going bad.  Already-gathered reader inputs
+  (the ``BlockCache``, in-flight dispatches) keep their clean copies —
+  disk rot does not reach the page cache.
+* **Composes with fail-stop** — ``kill_node`` records a node death
+  through the same ``Namenode`` liveness path ``run_job(fail_node_at=)``
+  uses, so corruption and node failure can interleave in one scenario.
+
+The typed errors live here (not in ``query``) so ``store``/``mapreduce``/
+``runtime`` can all raise/catch them without import cycles:
+
+* ``CorruptBlockError`` — a read-path checksum (or root-directory
+  consistency) verification failed for one (replica, block, column).
+  Carries the identity the recovery path needs to quarantine + re-plan.
+* ``UnrecoverableDataError`` — every replica of some block is dead or
+  quarantined, or the bounded re-plan retry budget is exhausted: the
+  caller gets a clean typed failure, never silent wrong rows.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class CorruptBlockError(RuntimeError):
+    """Read-path verification failed for one (replica, block, column).
+
+    ``col`` is the column whose chunk checksums mismatched, or the
+    sentinel ``"__root__"`` when the block's root directory disagreed
+    with its sorted key column (a stale/corrupt index directory would
+    silently mis-prune partitions — caught by the consistency check).
+    """
+
+    def __init__(self, replica_id: int, block_id: int, col: str,
+                 node: Optional[int] = None):
+        super().__init__(
+            f"corrupt block: replica {replica_id}, block {block_id}, "
+            f"col {col!r}" + (f", node {node}" if node is not None else ""))
+        self.replica_id = replica_id
+        self.block_id = block_id
+        self.col = col
+        self.node = node
+
+
+class UnrecoverableDataError(RuntimeError):
+    """No healthy replica can serve a block (all dead/quarantined), or the
+    bounded re-plan retry budget ran out.  Subclasses RuntimeError so
+    callers of the pre-existing ``plan()`` contract keep working."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryConfig:
+    """Knobs for the executor-side corruption/failover recovery loop.
+
+    ``max_retries``: re-plan attempts PER BLOCK within one job/flush
+    (corruption retries and node-failure retries share the counter) —
+    exceeding it raises ``UnrecoverableDataError`` instead of looping
+    while replicas keep dying.  ``scrub``: run the store's attached
+    background scrubber at the job/flush boundary.
+    """
+    max_retries: int = 3
+    scrub: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One injected fault (the injector's replayable audit trail)."""
+    kind: str                      # chunk | column | root | checksum | node
+    replica_id: int
+    block_id: int
+    col: Optional[str] = None
+    node: Optional[int] = None
+
+
+class FaultInjector:
+    """Deterministic corruption driver for one ``BlockStore``.
+
+    All mutations are silent — no checksum is updated, no cache is
+    invalidated — because that is what real corruption does.  Detection
+    must come from the read path / scrubber, which is the point.
+    """
+
+    def __init__(self, store, seed: int = 0):
+        self.store = store
+        self.rng = np.random.default_rng(seed)
+        self.events: list[FaultEvent] = []
+
+    # -- helpers ------------------------------------------------------------
+
+    def _pick_col(self, replica_id: int, col: Optional[str]) -> str:
+        if col is not None:
+            return col
+        names = sorted(self.store.replicas[replica_id].cols)
+        return names[int(self.rng.integers(len(names)))]
+
+    def _log(self, ev: FaultEvent) -> FaultEvent:
+        self.events.append(ev)
+        return ev
+
+    # -- corruption primitives ---------------------------------------------
+
+    def corrupt_chunk(self, replica_id: int, block_id: int,
+                      col: Optional[str] = None) -> FaultEvent:
+        """Flip ONE bit of one value in a column of a block — the smallest
+        detectable fault.  A single bit flip changes a byte by ±2^k with
+        k < 8, which can never cancel mod 65521, so the Fletcher-style
+        chunk checksum is GUARANTEED to mismatch."""
+        col = self._pick_col(replica_id, col)
+        rep = self.store.replicas[replica_id]
+        arr = rep.cols[col]
+        pos = int(self.rng.integers(arr.shape[1]))
+        bit = int(self.rng.integers(31))
+        old = int(np.asarray(arr[block_id, pos]))
+        rep.cols[col] = arr.at[block_id, pos].set(
+            jnp.asarray(old ^ (1 << bit), arr.dtype))
+        return self._log(FaultEvent("chunk", replica_id, block_id, col))
+
+    def corrupt_column(self, replica_id: int, block_id: int,
+                       col: Optional[str] = None) -> FaultEvent:
+        """Overwrite a block's whole column with random garbage (a torn
+        PAX minipage)."""
+        col = self._pick_col(replica_id, col)
+        rep = self.store.replicas[replica_id]
+        arr = rep.cols[col]
+        junk = self.rng.integers(0, 2**31 - 1, arr.shape[1], dtype=np.int32)
+        rep.cols[col] = arr.at[block_id].set(
+            jnp.asarray(junk, arr.dtype))
+        return self._log(FaultEvent("column", replica_id, block_id, col))
+
+    def corrupt_root(self, replica_id: int, block_id: int) -> FaultEvent:
+        """Scramble a block's root directory (index mins).  Checksums do
+        not cover the directory — detection relies on the read path's
+        root-consistency check against the sorted key column."""
+        rep = self.store.replicas[replica_id]
+        shift = int(self.rng.integers(1, 1 << 20))
+        rep.mins = rep.mins.at[block_id].add(jnp.int32(shift))
+        return self._log(FaultEvent("root", replica_id, block_id,
+                                    "__root__"))
+
+    def truncate_checksums(self, replica_id: int, block_id: int,
+                           col: Optional[str] = None) -> FaultEvent:
+        """Zero a block's stored checksums for one column — the analogue
+        of a truncated/stale checksum file.  The DATA is intact, but the
+        read path cannot prove it: the block is treated as corrupt and
+        repaired from a healthy replica (fresh checksums included)."""
+        col = self._pick_col(replica_id, col)
+        rep = self.store.replicas[replica_id]
+        rep.checksums[col] = rep.checksums[col].at[block_id].set(
+            jnp.uint32(0))
+        return self._log(FaultEvent("checksum", replica_id, block_id, col))
+
+    def corrupt_replicas(self, block_id: int, n_replicas: int,
+                         col: Optional[str] = None) -> list[FaultEvent]:
+        """Chaos helper: corrupt ``n_replicas`` DISTINCT replicas of one
+        block (chunk flips).  ``n_replicas == R`` makes the block
+        unrecoverable by construction."""
+        rids = self.rng.permutation(self.store.replication)[:n_replicas]
+        return [self.corrupt_chunk(int(r), block_id, col) for r in rids]
+
+    # -- fail-stop composition ---------------------------------------------
+
+    def kill_node(self, node: int) -> FaultEvent:
+        """Fail-stop a datanode through the namenode liveness path — the
+        same mechanism ``run_job(fail_node_at=...)`` injects, so chaos
+        scenarios can interleave corruption with node death."""
+        self.store.namenode.kill_node(node)
+        return self._log(FaultEvent("node", -1, -1, node=node))

@@ -43,6 +43,8 @@ import numpy as np
 from repro.core import checksum as ck
 from repro.core import index as idx
 from repro.core import query as q
+from repro.core.fault import (CorruptBlockError, RecoveryConfig,
+                              UnrecoverableDataError)
 from repro.core.splitting import Split, hadoop_splits, hail_splits
 from repro.core.store import BlockStore
 
@@ -80,6 +82,10 @@ class JobStats:
     # ^ per executed split, aligned with split_s: demotion wall charged to
     #   the split that needed the room (0.0 otherwise) — bridged into
     #   scheduler Tasks via ``Task.rekey_s``, like build_s
+    blocks_quarantined: int = 0  # corrupt (replica, block)s this job found
+    corrupt_retries: int = 0     # splits re-planned after CorruptBlockError
+    scrub_s: float = 0.0         # background-scrubber wall at the job
+    #   boundary (verify + repair of quarantined blocks)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -107,6 +113,20 @@ def _build_block_indexes(store: BlockStore, replica_id: int, block_ids,
 
     rep = store.replicas[replica_id]
     bsel = np.asarray(block_ids)
+    if store.verify_reads and len(bsel):
+        # verify BEFORE building: sorting corrupt bytes and committing them
+        # would recompute valid checksums over garbage, laundering the
+        # corruption past every future read-path check.  Failing blocks are
+        # quarantined and dropped from the offer (one batched dispatch).
+        names = sorted(rep.cols)
+        data = jnp.stack([rep.cols[c][bsel] for c in names])
+        sums = jnp.stack([rep.checksums[c][bsel] for c in names])
+        okm = np.asarray(ops.verify_blocks(data, sums)).all(axis=0)
+        for b in bsel[~okm]:
+            store.quarantine_block(replica_id, int(b))
+        bsel = bsel[okm]
+        if len(bsel) == 0:
+            return 0
     bad = q._bad_mask(store, replica_id)[bsel]     # pre-commit (upload order)
     sent = jnp.where(bad, jnp.iinfo(jnp.int32).max, rep.cols[key][bsel])
     cols = {c: v[bsel] for c, v in rep.cols.items()}
@@ -174,7 +194,8 @@ def piggyback_build(store: BlockStore, sp: "Split", adapt_rid: int,
     dead = store.namenode.dead
     offer = [b for b in sp.block_ids
              if not rep.indexed[b]
-             and int(rep.nodes[b]) not in dead][:build_budget]
+             and int(rep.nodes[b]) not in dead
+             and not store.is_quarantined(adapt_rid, b)][:build_budget]
     demoted, d_wall, b_wall = 0, 0.0, 0.0
     if offer and governor is not None:
         room = governor.room(store)
@@ -253,7 +274,8 @@ def run_job(store: BlockStore, query: q.HailQuery, *,
             reduce_fn: Optional[Callable] = None,
             fail_node_at: Optional[float] = None,
             reader: str = "jnp",
-            adaptive: Optional[AdaptiveConfig] = None) -> JobStats:
+            adaptive: Optional[AdaptiveConfig] = None,
+            recovery: RecoveryConfig = RecoveryConfig()) -> JobStats:
     """Execute filter/project (+optional reduce) over all blocks.
 
     reader: 'jnp' (batched jnp record reader) or 'kernels' (fused Pallas
@@ -273,7 +295,20 @@ def run_job(store: BlockStore, query: q.HailQuery, *,
     budget, victims are evicted (or the offer trimmed) first.  Demotion
     walls are charged per split (``JobStats.demote_s``/``rekey_s``) and
     dropped indexes counted in ``JobStats.blocks_demoted``.
+
+    recovery: corruption/failover retry policy.  A split whose read-path
+    verification raises ``CorruptBlockError`` quarantines the corrupt
+    (replica, block) at the namenode and re-plans the split's blocks onto
+    surviving replicas as per-block retry splits — the same shape the
+    node-failure path produces.  Retries are BOUNDED per block
+    (``recovery.max_retries``, failover and corruption share the budget);
+    exhausting it, or losing every replica of a block, raises
+    ``UnrecoverableDataError`` — never silent wrong rows.  With
+    ``recovery.scrub`` and a scrubber attached (``store.scrubber``), the
+    job boundary also verifies a budgeted batch of cold blocks and repairs
+    whatever is quarantined (``JobStats.scrub_s``).
     """
+    import collections as _collections
     from repro.core import governor as gvn
 
     gvn.note_job_start(store)   # job boundary for the hysteresis counter
@@ -321,6 +356,21 @@ def run_job(store: BlockStore, query: q.HailQuery, *,
     demote_s: list[float] = []            # per split, aligned with dispatched
     blocks_indexed = 0
     full_scan_blocks = 0
+    blocks_quarantined = 0
+    corrupt_retries = 0
+    retry_count: _collections.Counter = _collections.Counter()
+
+    def note_retries(block_ids):
+        """Charge one re-plan attempt to each block; a block that keeps
+        failing (nodes dying AND replicas rotting faster than the retry
+        budget) surfaces a typed error instead of looping forever."""
+        for b in block_ids:
+            retry_count[b] += 1
+            if retry_count[b] > recovery.max_retries:
+                raise UnrecoverableDataError(
+                    f"block {b}: re-plan retry budget "
+                    f"({recovery.max_retries}) exhausted")
+
     t_start = time.perf_counter()
     i = 0
     pending = list(splits)
@@ -329,11 +379,32 @@ def run_job(store: BlockStore, query: q.HailQuery, *,
             # kill the node that would serve the next split and re-plan
             pending, qplan, failed_node, rescheduled = failover_replan(
                 store, query, pending, i)
+            if rescheduled:
+                note_retries(b for s in pending[-rescheduled:]
+                             for b in s.block_ids)
             if i >= len(pending):
                 break
         sp = pending[i]
         i += 1
-        dispatched.append((read_split(sp), time.perf_counter()))
+        try:
+            res = read_split(sp)
+        except CorruptBlockError as e:
+            # detection -> recovery: quarantine the corrupt copy at the
+            # namenode, re-plan against the now-smaller replica set (plan
+            # raises UnrecoverableDataError once a block has no healthy
+            # copy left), and re-queue this split's blocks as per-block
+            # retry splits — the same shape the node-failure path emits.
+            store.quarantine_block(e.replica_id, e.block_id)
+            blocks_quarantined += 1
+            corrupt_retries += 1
+            note_retries(sp.block_ids)
+            qplan = q.plan(store, query)
+            pending.extend(
+                Split(node=int(qplan.nodes[b]), block_ids=(b,),
+                      index_scan=bool(qplan.index_scan[b]))
+                for b in sp.block_ids)
+            continue
+        dispatched.append((res, time.perf_counter()))
         if not sp.index_scan:
             full_scan_blocks += len(sp.block_ids)
         # --- adaptive piggyback: this full-scan split already read these
@@ -369,6 +440,14 @@ def run_job(store: BlockStore, query: q.HailQuery, *,
     if failed_node is not None:
         store.namenode.revive(failed_node)
 
+    # job boundary: budgeted background scrub (verify cold blocks, repair
+    # anything quarantined) — corruption is found before queries hit it
+    scrub_s = 0.0
+    if recovery.scrub and store.scrubber is not None:
+        t_s = time.perf_counter()
+        store.scrubber.tick()
+        scrub_s = time.perf_counter() - t_s
+
     mask = np.concatenate(masks, axis=0)
     out = {c: np.concatenate([d[c] for d in cols], axis=0)
            for c in cols[0]} if cols else {}
@@ -395,7 +474,9 @@ def run_job(store: BlockStore, query: q.HailQuery, *,
                     index_build_s=sum(build_s), build_s=build_s,
                     full_scan_blocks=full_scan_blocks, modeled_s=modeled,
                     blocks_demoted=blocks_demoted, rekey_s=sum(demote_s),
-                    demote_s=demote_s)
+                    demote_s=demote_s,
+                    blocks_quarantined=blocks_quarantined,
+                    corrupt_retries=corrupt_retries, scrub_s=scrub_s)
 
 
 # ---------------------------------------------------------------------------

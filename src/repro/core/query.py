@@ -39,6 +39,7 @@ import numpy as np
 from repro.core import governor as gov
 from repro.core import index as idx
 from repro.core import parse as ps
+from repro.core.fault import CorruptBlockError, UnrecoverableDataError
 from repro.core.schema import ROWID, Schema
 from repro.core.store import BlockStore
 
@@ -117,7 +118,8 @@ def plan(store: BlockStore, query: HailQuery) -> QueryPlan:
     for b in range(nb):
         alive = store.alive_replica_ids(b)
         if not alive:
-            raise RuntimeError(f"block {b}: all replicas lost")
+            raise UnrecoverableDataError(
+                f"block {b}: all replicas lost or quarantined")
         choice = None
         if want is not None and store.layout == "pax":
             for i in alive:
@@ -190,6 +192,44 @@ def _bad_mask(store: BlockStore, replica: int) -> jax.Array:
     return m
 
 
+def _verify_replica_blocks(store: BlockStore, rid: int, bsel, names):
+    """Read-path integrity gate for one replica's blocks (§3.2: HDFS always
+    verifies chunk checksums on read; HAIL keeps that working with
+    per-replica checksums).  Verifies exactly the columns this read will
+    touch in ONE batched device dispatch, plus root-directory consistency
+    (mins re-derived from the now-verified key column) for indexed blocks
+    when the read uses the index.  Raises ``CorruptBlockError`` carrying the
+    first failing (replica, block, col) — the executor quarantines it and
+    re-plans.  Gated by ``store.verify_reads``; callers on the cached path
+    invoke this only on BlockCache FILLS, so hits pay nothing."""
+    if not store.verify_reads or store.layout != "pax":
+        return
+    from repro.kernels import ops
+    rep = store.replicas[rid]
+    names = tuple(dict.fromkeys(names))
+    bsel = np.asarray(bsel)
+    data = jnp.stack([rep.cols[c][bsel] for c in names])
+    sums = jnp.stack([rep.checksums[c][bsel] for c in names])
+    ok = np.asarray(ops.verify_blocks(data, sums))
+    if not ok.all():
+        ci, bi = np.argwhere(~ok)[0]
+        ops.DISPATCH_COUNTS["verify_failures"] += 1
+        b = int(bsel[bi])
+        raise CorruptBlockError(rid, b, names[ci], int(rep.nodes[b]))
+    if rep.sort_key in names:
+        isel = np.asarray(rep.indexed[bsel], bool)
+        if isel.any():
+            sub = bsel[isel]
+            rok = np.asarray(ops.verify_root(
+                rep.mins[sub], rep.cols[rep.sort_key][sub],
+                partition_size=store.partition_size))
+            if not rok.all():
+                ops.DISPATCH_COUNTS["verify_failures"] += 1
+                b = int(sub[np.argwhere(~rok)[0][0]])
+                raise CorruptBlockError(rid, b, "__root__",
+                                        int(rep.nodes[b]))
+
+
 def read_hail(store: BlockStore, query: HailQuery, qplan: QueryPlan,
               block_ids: Sequence[int] | None = None) -> ReadResult:
     """HAIL record reader over (a subset of) blocks, per-replica batched.
@@ -218,6 +258,10 @@ def read_hail(store: BlockStore, query: HailQuery, qplan: QueryPlan,
         sel = np.nonzero(qplan.replica_for_block[ids] == rid)[0]
         bsel = ids[sel]
         rep = store.replicas[int(rid)]
+        _verify_replica_blocks(
+            store, int(rid), bsel,
+            (proj_cols if query.filter is None
+             else (query.filter[0],) + proj_cols))
         bad = _bad_mask(store, int(rid))[bsel]
         use_index = bool(qplan.index_scan[bsel].all()) and query.filter is not None
         if query.filter is not None:
@@ -280,6 +324,10 @@ def _gather_replica_inputs(store: BlockStore, rid: int, bsel: np.ndarray,
         if hit is not None:
             return hit
     rep = store.replicas[rid]
+    # verify on FILL, not on hit: cached gathers are separate device arrays
+    # already proven against the stored checksums, so hot splits pay zero
+    # verification cost (the clean-path overhead bound in bench_fault)
+    _verify_replica_blocks(store, rid, bsel, (col,) + proj_cols)
     val = (rep.cols[col][bsel],
            jnp.stack([rep.cols[c][bsel] for c in proj_cols], axis=-1),
            _bad_mask(store, rid)[bsel],

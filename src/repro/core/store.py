@@ -61,13 +61,29 @@ class Namenode:
         self.dir_block: dict[int, list[int]] = {}
         self.dir_rep: dict[tuple[int, int], ReplicaInfo] = {}
         self.dead: set[int] = set()
+        # (block_id, node) pairs whose replica failed read-path checksum
+        # verification — excluded from placement like a dead node, but at
+        # BLOCK granularity, and reversible only by repair_blocks (never by
+        # revive: a revived node's corrupt block is still corrupt)
+        self.quarantined: set[tuple[int, int]] = set()
 
     def register(self, info: ReplicaInfo):
         self.dir_block.setdefault(info.block_id, []).append(info.node)
         self.dir_rep[(info.block_id, info.node)] = info
 
     def locate(self, block_id: int) -> list[int]:
-        return [n for n in self.dir_block[block_id] if n not in self.dead]
+        return [n for n in self.dir_block[block_id]
+                if n not in self.dead
+                and (block_id, n) not in self.quarantined]
+
+    def quarantine(self, block_id: int, node: int):
+        self.quarantined.add((block_id, node))
+
+    def clear_quarantine(self, block_id: int, node: int):
+        self.quarantined.discard((block_id, node))
+
+    def is_quarantined(self, block_id: int, node: int) -> bool:
+        return (block_id, node) in self.quarantined
 
     def replicas(self, block_id: int) -> list[ReplicaInfo]:
         return [self.dir_rep[(block_id, n)] for n in self.locate(block_id)]
@@ -129,6 +145,17 @@ class Replica:
 
 
 @dataclasses.dataclass
+class RepairStats:
+    """What one ``repair_blocks`` pass did (feeds the repair-cost model:
+    modeled repair I/O = bytes_rewritten read from the donor + written to
+    the victim, over the cluster disk bandwidth)."""
+    blocks_repaired: int = 0
+    unrepairable: int = 0
+    bytes_rewritten: int = 0
+    wall_s: float = 0.0
+
+
+@dataclasses.dataclass
 class BlockStore:
     schema: Schema
     n_blocks: int
@@ -146,6 +173,10 @@ class BlockStore:
     block_cache: Any = None                # cache.BlockCache when a serving
     #   layer caches decoded split inputs — commit_block_indexes and
     #   demote_replica invalidate the touched replica's entries
+    verify_reads: bool = True              # read-path checksum verification
+    #   (amortized to BlockCache fills when a cache is attached)
+    scrubber: Any = None                   # runtime.scrubber.Scrubber when
+    #   background verification is attached (ticks at job/flush boundaries)
 
     @property
     def replication(self) -> int:
@@ -168,12 +199,141 @@ class BlockStore:
         return self.replica_for(key)
 
     def alive_replica_ids(self, block_id: int) -> list[int]:
-        """Replica indices whose datanode for this block is alive."""
+        """Replica indices whose datanode for this block is alive AND whose
+        copy of the block is not quarantined — the set ``plan()`` may place
+        reads on."""
         out = []
         for i, r in enumerate(self.replicas):
-            if int(r.nodes[block_id]) not in self.namenode.dead:
+            node = int(r.nodes[block_id])
+            if (node not in self.namenode.dead
+                    and not self.namenode.is_quarantined(block_id, node)):
                 out.append(i)
         return out
+
+    # -- corruption: quarantine / verification / repair ---------------------
+
+    def quarantine_block(self, replica_id: int, block_id: int):
+        """Record that this replica's copy of a block failed verification.
+        The (block, node) pair leaves ``locate``/``alive_replica_ids`` (and
+        hence ``plan``) until ``repair_blocks`` restores it; any cached
+        gathers touching it are dropped."""
+        node = int(self.replicas[replica_id].nodes[block_id])
+        self.namenode.quarantine(block_id, node)
+        if self.block_cache is not None:
+            self.block_cache.invalidate_blocks(replica_id, [block_id])
+        from repro.kernels import ops
+        ops.DISPATCH_COUNTS["blocks_quarantined"] += 1
+
+    def is_quarantined(self, replica_id: int, block_id: int) -> bool:
+        return self.namenode.is_quarantined(
+            block_id, int(self.replicas[replica_id].nodes[block_id]))
+
+    def quarantined_blocks(self, replica_id: int) -> list[int]:
+        nodes = self.replicas[replica_id].nodes
+        return [b for b in range(self.n_blocks)
+                if (b, int(nodes[b])) in self.namenode.quarantined]
+
+    def verify_block(self, replica_id: int, block_id: int) -> bool:
+        """Full integrity check of one (replica, block): every column's
+        chunk checksums, plus root-directory consistency (mins re-derived
+        from the verified key column) when the block is indexed.  Used by
+        the scrubber and by repair-source selection."""
+        from repro.kernels import ops
+        rep = self.replicas[replica_id]
+        names = sorted(rep.cols)
+        sl = slice(block_id, block_id + 1)
+        data = jnp.stack([rep.cols[c][sl] for c in names])
+        sums = jnp.stack([rep.checksums[c][sl] for c in names])
+        if not bool(np.asarray(ops.verify_blocks(data, sums)).all()):
+            return False
+        if rep.block_indexed(block_id):
+            return bool(np.asarray(ops.verify_root(
+                rep.mins[sl], rep.cols[rep.sort_key][sl],
+                partition_size=self.partition_size)).all())
+        return True
+
+    def _healthy_source(self, victim_id: int, block_id: int) -> Optional[int]:
+        """A replica that can donate this block: alive, unquarantined, and
+        freshly verified (a donor with latent corruption must not launder
+        its rot into the repair)."""
+        for rid in self.alive_replica_ids(block_id):
+            if rid != victim_id and self.verify_block(rid, block_id):
+                return rid
+        return None
+
+    def repair_blocks(self) -> "RepairStats":
+        """Rebuild every quarantined block of this store from a healthy
+        replica — the HAIL twist being that repair PRESERVES the victim's
+        clustered index instead of byte-copying the donor's (differently
+        sorted) bytes:
+
+        1. donor rows return to upload order by sorting on the logical
+           ``__rowid__`` column (any replica reconstructs the logical
+           block — the same invariant failover relies on);
+        2. if the victim block was indexed, re-sort under the VICTIM's own
+           ``sort_key`` with bad records to the tail (the stable device
+           sort reproduces a fresh eager upload's layout bit-for-bit) and
+           rebuild the root-directory row;
+        3. splice columns + root + freshly recomputed checksums, clear the
+           quarantine, and invalidate the bad-mask/block caches for just
+           the touched blocks.
+
+        The governor's AccessLog is untouched — repair restores bytes, it
+        is not a workload event.  Blocks with no healthy donor stay
+        quarantined and are counted ``unrepairable``.
+        """
+        import time as _time
+        from repro.kernels import ops
+        assert self.layout == "pax", "repair targets PAX replicas"
+        t0 = _time.perf_counter()
+        stats = RepairStats()
+        by_rep: dict[int, list[int]] = {}
+        node_rep = {(b, int(r.nodes[b])): i
+                    for i, r in enumerate(self.replicas)
+                    for b in range(self.n_blocks)}
+        for (b, node) in sorted(self.namenode.quarantined):
+            rid = node_rep.get((b, node))
+            if rid is not None:
+                by_rep.setdefault(rid, []).append(b)
+        big = jnp.iinfo(jnp.int32).max
+        for rid, blocks in sorted(by_rep.items()):
+            rep = self.replicas[rid]
+            repaired = []
+            for b in blocks:
+                src_id = self._healthy_source(rid, b)
+                if src_id is None:
+                    stats.unrepairable += 1
+                    continue
+                src = self.replicas[src_id]
+                # donor -> upload order via logical row identity
+                _, upload_cols, _ = ops.sort_block(
+                    src.cols[ROWID][b][None],
+                    {c: v[b][None] for c, v in src.cols.items()})
+                if rep.block_indexed(b):
+                    keys = jnp.where(self.bad_original[b][None], big,
+                                     upload_cols[rep.sort_key])
+                    _, new_cols, _ = ops.sort_block(keys, upload_cols)
+                    rep.mins = rep.mins.at[b].set(idx.build_block_roots(
+                        new_cols[rep.sort_key], self.partition_size)[0])
+                else:
+                    new_cols = upload_cols
+                    rep.mins = rep.mins.at[b].set(jnp.int32(0))
+                for c, v in new_cols.items():
+                    rep.cols[c] = rep.cols[c].at[b].set(v[0])
+                    rep.checksums[c] = rep.checksums[c].at[b].set(
+                        ck.chunk_checksums(v[0]))
+                    stats.bytes_rewritten += int(
+                        v[0].size * v[0].dtype.itemsize)
+                self.namenode.clear_quarantine(b, int(rep.nodes[b]))
+                repaired.append(b)
+                stats.blocks_repaired += 1
+                ops.DISPATCH_COUNTS["blocks_repaired"] += 1
+            if repaired:
+                self.__dict__.get("_bad_mask_cache", {}).pop(rid, None)
+                if self.block_cache is not None:
+                    self.block_cache.invalidate_blocks(rid, repaired)
+        stats.wall_s = _time.perf_counter() - t0
+        return stats
 
     @property
     def nbytes(self) -> int:
@@ -232,6 +392,16 @@ class BlockStore:
         assert rep.sort_key in (None, sort_key), \
             f"replica {replica_id} already keyed on {rep.sort_key!r}"
         bsel = np.asarray(block_ids)
+        # never commit a quarantined block: its source bytes are suspect and
+        # a commit would recompute "valid" checksums over corrupt data,
+        # laundering the corruption past every future verification
+        clean = np.array([not self.is_quarantined(replica_id, int(b))
+                          for b in bsel], dtype=bool)
+        if not clean.all():
+            bsel = bsel[clean]
+            sorted_cols = {c: v[clean] for c, v in sorted_cols.items()}
+            new_mins = new_mins[clean]
+            new_checksums = {c: s[clean] for c, s in new_checksums.items()}
         if self.governor is not None:
             keep = self.governor.admit(self, replica_id, len(bsel))
             if keep < len(bsel):
@@ -280,7 +450,17 @@ class BlockStore:
         old_key = rep.sort_key
         bsel = np.nonzero(rep.indexed)[0]       # only indexed blocks moved;
         dropped = len(bsel)                     # the rest are already in
-        if dropped:                             # upload order (mid-re-key)
+        # quarantined blocks are NOT un-sorted or re-checksummed: their
+        # bytes are corrupt, and recomputing checksums over them would
+        # launder the corruption into a "verified" state.  They keep their
+        # quarantine through the demotion (the budget still counts their
+        # index as dropped) and are restored to upload order by
+        # repair_blocks, which sees block_indexed()==False post-demote.
+        qset = {int(b) for b in self.quarantined_blocks(replica_id)}
+        if qset:
+            bsel = np.array([b for b in bsel if int(b) not in qset],
+                            dtype=np.int64)
+        if len(bsel):                           # upload order (mid-re-key)
             # device-side un-sort: sorting by the logical __rowid__ column
             # IS the inverse permutation back to upload order, and it runs
             # through the same kernels/block_sort bitonic network the build

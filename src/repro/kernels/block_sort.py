@@ -30,7 +30,15 @@ def _compare_exchange(keys, perm, j: int, k: int):
     # ascending iff (group_base & k) == 0; constant within each 2j group
     base = jax.lax.broadcasted_iota(jnp.int32, (n // (2 * j), 1), 0) * (2 * j)
     asc = (base & k) == 0
-    swap = jnp.where(asc, lo_k > hi_k, lo_k < hi_k)
+    # Lexicographic (key, perm) comparator: perm starts as iota, so ties
+    # break on original position — the network sorts a distinct composite
+    # key, making the emitted permutation STABLE.  Stability matters for
+    # corruption repair: a repaired block must reproduce the layout of a
+    # fresh eager upload (jnp stable argsort) bit-for-bit so its recomputed
+    # checksums match a healthy replica's.
+    gt = (lo_k > hi_k) | ((lo_k == hi_k) & (lo_p > hi_p))
+    lt = (lo_k < hi_k) | ((lo_k == hi_k) & (lo_p < hi_p))
+    swap = jnp.where(asc, gt, lt)
     new_lo_k = jnp.where(swap, hi_k, lo_k)
     new_hi_k = jnp.where(swap, lo_k, hi_k)
     new_lo_p = jnp.where(swap, hi_p, lo_p)

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import checksum as _ck
 from repro.kernels import ref
 from repro.kernels.block_sort import bitonic_sort
 from repro.kernels.flash_attention import flash_attention
@@ -186,6 +187,35 @@ def _hail_read_batch_ref_jit(mins, keys, proj, bad, use_index, lohi,
     TRACE_COUNTS["hail_read_batch_ref"] += 1
     return ref.hail_read_batch(mins, keys, proj, bad, use_index, lohi,
                                partition_size=partition_size)
+
+
+@jax.jit
+def _verify_blocks_jit(data, sums):
+    TRACE_COUNTS["verify_blocks"] += 1
+    return _ck.verify_blocks(data, sums)
+
+
+@functools.partial(jax.jit, static_argnames=("partition_size",))
+def _verify_root_jit(mins, keys, *, partition_size):
+    TRACE_COUNTS["verify_root"] += 1
+    return _ck.verify_root(mins, keys, partition_size)
+
+
+def verify_blocks(data, sums) -> jax.Array:
+    """Batched chunk-checksum verify: data (C, B, rows) int32 columns
+    stacked, sums (C, B, chunks) uint32 -> bool (C, B).  ONE dispatch per
+    call; the read path calls it once per BlockCache fill, so verification
+    cost amortizes across cache hits.  ``verify_block_cols`` counts the
+    (col, block) pairs proven, for the clean-path overhead guard."""
+    DISPATCH_COUNTS["verify_blocks"] += 1
+    DISPATCH_COUNTS["verify_block_cols"] += int(data.shape[0] * data.shape[1])
+    return _verify_blocks_jit(data, sums)
+
+
+def verify_root(mins, keys, *, partition_size: int) -> jax.Array:
+    """Root-directory consistency check (mins vs sorted key column)."""
+    DISPATCH_COUNTS["verify_root"] += 1
+    return _verify_root_jit(mins, keys, partition_size=partition_size)
 
 
 def index_search(mins: jax.Array, lo, hi) -> jax.Array:

@@ -48,6 +48,7 @@ Q / makespan) between the batched and serial schedules.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Optional, Sequence
@@ -59,8 +60,10 @@ from repro.core import governor as gvn
 from repro.core import mapreduce as mr
 from repro.core import query as q
 from repro.core.cache import BlockCache
+from repro.core.fault import (CorruptBlockError, RecoveryConfig,
+                              UnrecoverableDataError)
 from repro.core.query import HailQuery
-from repro.core.splitting import hadoop_splits, hail_splits
+from repro.core.splitting import Split, hadoop_splits, hail_splits
 from repro.core.store import BlockStore
 from repro.runtime.scheduler import Task
 
@@ -91,6 +94,8 @@ class ServerConfig:
     adaptive: Optional[mr.AdaptiveConfig] = None
     cluster: mr.ClusterModel = dataclasses.field(
         default_factory=mr.ClusterModel)
+    recovery: RecoveryConfig = dataclasses.field(
+        default_factory=RecoveryConfig)
 
 
 @dataclasses.dataclass
@@ -132,6 +137,9 @@ class FlushStats:
     cache_misses: int = 0
     wall_s: float = 0.0
     modeled_s: float = 0.0         # deterministic: scheduling + shared disk
+    blocks_quarantined: int = 0    # corrupt (replica, block)s this flush found
+    corrupt_retries: int = 0       # batch splits re-planned after corruption
+    scrub_s: float = 0.0           # boundary scrub wall (verify + repair)
 
 
 def flush_tasks(stats: FlushStats) -> list[Task]:
@@ -247,12 +255,21 @@ class HailServer:
         # cannot satisfy claim-time hysteresis with its own batches —
         # "queries once" means "one flush", however many batches it takes
         gvn.note_job_start(self.store)
+        # corruption retry budget is per FLUSH per block — corruption and
+        # node-failure retries share it, like run_job's
+        retries: collections.Counter = collections.Counter()
         t0 = time.perf_counter()
         for batch in batches:
-            self._run_batch(batch, stats, budget, fail)
+            self._run_batch(batch, stats, budget, fail, retries)
         stats.wall_s = time.perf_counter() - t0
         if fail["node"] is not None:
             self.store.namenode.revive(fail["node"])
+        # flush boundary: budgeted background scrub + repair of anything
+        # quarantined (by this flush's reads or the scrub itself)
+        if self.config.recovery.scrub and self.store.scrubber is not None:
+            t_s = time.perf_counter()
+            self.store.scrubber.tick()
+            stats.scrub_s = time.perf_counter() - t_s
         cluster = self.config.cluster
         overhead = stats.n_splits * cluster.hail_sched_overhead_s
         disk_s = stats.bytes_read / (cluster.disk_bw * cluster.n_nodes)
@@ -279,11 +296,22 @@ class HailServer:
         return res, sum(r.bytes_read for r in res)
 
     def _run_batch(self, batch: list[Ticket], stats: FlushStats,
-                   budget: dict, fail: dict):
+                   budget: dict, fail: dict,
+                   retries: collections.Counter):
         """Execute one shared-scan batch: plan once, dispatch one fused call
         per split, piggyback shared-quantum adaptive builds, handle node
-        failure by re-planning lost splits (per-block retries) — the same
-        loop shape as ``run_job``, widened to Q queries."""
+        failure AND read-path corruption by re-planning lost splits
+        (per-block retries, bounded by ``config.recovery``) — the same loop
+        shape as ``run_job``, widened to Q queries."""
+
+        def note_retries(block_ids):
+            for b in block_ids:
+                retries[b] += 1
+                if retries[b] > self.config.recovery.max_retries:
+                    raise UnrecoverableDataError(
+                        f"block {b}: re-plan retry budget "
+                        f"({self.config.recovery.max_retries}) exhausted")
+
         store = self.store
         queries = [t.query for t in batch]
         query0 = queries[0]
@@ -318,12 +346,30 @@ class HailServer:
                 pending, qplan, fail["node"], n_retries = \
                     mr.failover_replan(store, query0, pending, i)
                 stats.rescheduled_tasks += n_retries
+                if n_retries:
+                    note_retries(b for s in pending[-n_retries:]
+                                 for b in s.block_ids)
                 if i >= len(pending):
                     break
             sp = pending[i]
             i += 1
-            res, shared = self._read_batch(queries, qplan,
-                                           list(sp.block_ids))
+            try:
+                res, shared = self._read_batch(queries, qplan,
+                                               list(sp.block_ids))
+            except CorruptBlockError as e:
+                # quarantine at the namenode, re-plan against the smaller
+                # replica set, re-queue this split's blocks as per-block
+                # retries — identical recovery shape to run_job's
+                store.quarantine_block(e.replica_id, e.block_id)
+                stats.blocks_quarantined += 1
+                stats.corrupt_retries += 1
+                note_retries(sp.block_ids)
+                qplan = q.plan(store, query0)
+                pending.extend(
+                    Split(node=int(qplan.nodes[b]), block_ids=(b,),
+                          index_scan=bool(qplan.index_scan[b]))
+                    for b in sp.block_ids)
+                continue
             dispatched.append((res, shared, time.perf_counter()))
             d_wall, demote_pending = demote_pending, 0.0
             b_wall = 0.0

@@ -80,3 +80,63 @@ def test_elastic_reshard_restore(tmp_path):
     b = jax.tree.leaves(got["params"])[0]
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     assert b.sharding.mesh.shape == {"data": 1, "model": 1}
+
+
+def _save_three(tmp_path):
+    """Steps 1..3, values offset by the step number; returns the dirs."""
+    st = _state()
+    dirs = {}
+    for step in (1, 2, 3):
+        sti = jax.tree.map(lambda x, s=step: x + s, st)
+        dirs[step] = ck.save(sti, str(tmp_path), step)
+    return st, dirs
+
+
+def test_torn_manifest_skips_to_previous_step(tmp_path):
+    """A crash mid-manifest-write (torn JSON) must not wedge restore: the
+    step is unverifiable and the previous good step is restored."""
+    st, dirs = _save_three(tmp_path)
+    mpath = os.path.join(dirs[3], "manifest.json")
+    raw = open(mpath, "rb").read()
+    with open(mpath, "wb") as f:
+        f.write(raw[:len(raw) // 2])          # torn: half-written JSON
+    got, step = ck.restore_latest(str(tmp_path), st)
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(got["params"]["w"]),
+                                  np.asarray(st["params"]["w"]) + 2)
+
+
+def test_truncated_leaf_skips_to_previous_step(tmp_path):
+    """A leaf file cut short (partial write / disk-full) fails its CRC —
+    even though the manifest itself is intact."""
+    st, dirs = _save_three(tmp_path)
+    victim = next(f for f in sorted(os.listdir(dirs[3]))
+                  if f.endswith(".npy"))
+    p = os.path.join(dirs[3], victim)
+    os.truncate(p, os.path.getsize(p) // 2)
+    got, step = ck.restore_latest(str(tmp_path), st)
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(got["params"]["b"]),
+                                  np.asarray(st["params"]["b"]) + 2)
+
+
+def test_bad_manifest_crc_skips_newest_verifiable(tmp_path):
+    """A wrong stored CRC (bit rot in the manifest) poisons its step; a
+    SECOND corrupt step underneath must also be skipped — restore lands on
+    the newest step that actually verifies end to end."""
+    st, dirs = _save_three(tmp_path)
+    import json
+    mpath = os.path.join(dirs[3], "manifest.json")
+    man = json.load(open(mpath))
+    fn = sorted(man["leaves"])[0]
+    man["leaves"][fn]["crc32"] ^= 0xFFFFFFFF  # stored CRC no longer matches
+    json.dump(man, open(mpath, "w"))
+    victim = next(f for f in sorted(os.listdir(dirs[2]))
+                  if f.endswith(".npy"))
+    with open(os.path.join(dirs[2], victim), "r+b") as f:
+        f.seek(16)
+        f.write(b"\x5a\x5a\x5a\x5a")          # step 2 rots too
+    got, step = ck.restore_latest(str(tmp_path), st)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(got["step"]),
+                                  np.asarray(st["step"]) + 1)

@@ -1,0 +1,409 @@
+"""Corruption resilience: fault injection, read-path checksum verification,
+replica quarantine, bounded-retry recovery, index-preserving repair, the
+background scrubber, and the chaos property test (seeded corruption of up
+to R-1 replicas interleaved with adaptive commits, demotions and a node
+failure never changes any query's row-set; all-R corruption surfaces
+``UnrecoverableDataError`` — never silent wrong rows).
+
+All stores here are built FRESH per test (never the session fixtures): the
+whole point of the module is to corrupt them.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import checksum as ck
+from repro.core import governor as gv
+from repro.core import mapreduce as mr
+from repro.core import query as q
+from repro.core import schema as sc
+from repro.core import upload as up
+from repro.core.fault import (CorruptBlockError, FaultInjector,
+                              RecoveryConfig, UnrecoverableDataError)
+from repro.core.parse import format_rows
+from repro.core.schema import ROWID
+from repro.kernels import ops
+from repro.runtime.jobserver import HailServer, ServerConfig
+from repro.runtime.scrubber import ScrubConfig, Scrubber
+
+ROWS, BLOCKS, PART = 256, 4, 64
+KEYS = ["visitDate", "sourceIP", "adRevenue"]
+QUERY = q.HailQuery(filter=("visitDate", 8000, 9000),
+                    projection=("sourceIP",))
+
+
+@pytest.fixture(scope="module")
+def raw():
+    cols = sc.gen_uservisits(ROWS * BLOCKS, seed=11)
+    blocks = format_rows(sc.USERVISITS, cols,
+                         bad_fraction=0.002).reshape(BLOCKS, ROWS, -1)
+    return cols, blocks
+
+
+@pytest.fixture(scope="module")
+def oracle(raw):
+    """Query -> sorted matching rowids, from the PRISTINE column data."""
+    cols, blocks = raw
+    store, _ = up.hail_upload(sc.USERVISITS, blocks, KEYS,
+                              partition_size=PART, n_nodes=6)
+    bad = np.asarray(store.bad_original).reshape(-1)
+
+    def expect(query):
+        col, lo, hi = query.filter
+        v = np.asarray(cols[col])
+        return np.nonzero((v >= lo) & (v <= hi) & ~bad)[0]
+    return expect
+
+
+def _eager(raw):
+    store, _ = up.hail_upload(sc.USERVISITS, raw[1], KEYS,
+                              partition_size=PART, n_nodes=6)
+    return store
+
+
+def _lazy(raw):
+    store, _ = up.hail_upload(sc.USERVISITS, raw[1], index_columns=(),
+                              partition_size=PART, n_nodes=6)
+    return store
+
+
+def _rowids(out, mask):
+    return np.sort(out[ROWID].reshape(-1)[mask.reshape(-1)])
+
+
+# ---------------------------------------------------------------------------
+# injector + detection primitives
+# ---------------------------------------------------------------------------
+
+
+def test_injector_deterministic(raw):
+    s1, s2 = _eager(raw), _eager(raw)
+    e1 = [FaultInjector(s1, seed=9).corrupt_chunk(1, 2) for _ in range(2)]
+    e2 = [FaultInjector(s2, seed=9).corrupt_chunk(1, 2) for _ in range(2)]
+    assert e1 == e2                       # same seed, same fault sequence
+    np.testing.assert_array_equal(
+        np.asarray(s1.replicas[1].cols[e1[0].col]),
+        np.asarray(s2.replicas[1].cols[e1[0].col]))
+    s3 = _eager(raw)
+    FaultInjector(s3, seed=9).corrupt_chunk(1, 2)
+    assert not s3.verify_block(1, 2)      # and the fault is detectable
+    assert s3.verify_block(0, 2)          # other replicas untouched
+
+
+@given(st.integers(0, ROWS - 1), st.integers(0, 30))
+@settings(max_examples=15, deadline=None)
+def test_single_bitflip_always_detected(pos, bit):
+    """A one-bit flip moves one byte by ±2^k (k<8), which cannot cancel
+    mod 65521 — the Fletcher-style chunk checksum must ALWAYS change."""
+    data = jnp.arange(ROWS, dtype=jnp.int32)
+    sums = ck.chunk_checksums(data)
+    flipped = data.at[pos].set(jnp.int32(int(data[pos]) ^ (1 << bit)))
+    assert not bool(ck.verify(flipped, sums).all())
+
+
+def test_verify_blocks_batched_counters(raw):
+    store = _eager(raw)
+    rep = store.replicas[0]
+    names = sorted(rep.cols)
+    data = jnp.stack([rep.cols[c] for c in names])
+    sums = jnp.stack([rep.checksums[c] for c in names])
+    with ops.stats_scope() as s:
+        ok = np.asarray(ops.verify_blocks(data, sums))
+    assert ok.all() and ok.shape == (len(names), BLOCKS)
+    assert s.dispatches["verify_blocks"] == 1          # ONE fused dispatch
+    assert s.dispatches["verify_block_cols"] == len(names) * BLOCKS
+
+
+# ---------------------------------------------------------------------------
+# read path: detect -> quarantine -> re-plan -> identical rows
+# ---------------------------------------------------------------------------
+
+
+def test_job_recovers_from_chunk_corruption(raw, oracle):
+    store = _eager(raw)
+    FaultInjector(store, seed=1).corrupt_chunk(0, 2, "visitDate")
+    stats = mr.run_job(store, QUERY, reduce_fn=_rowids)
+    np.testing.assert_array_equal(stats.results["reduce"], oracle(QUERY))
+    assert stats.blocks_quarantined == 1
+    assert stats.corrupt_retries == 1
+    assert store.is_quarantined(0, 2)
+    # the quarantined copy is out of planning until repaired
+    assert 0 not in store.alive_replica_ids(2)
+
+
+def test_job_recovers_from_root_corruption(raw, oracle):
+    """The root directory is not checksummed — a scrambled directory would
+    silently mis-prune partitions.  The consistency check (mins re-derived
+    from the verified key column) must catch it."""
+    store = _eager(raw)
+    FaultInjector(store, seed=2).corrupt_root(0, 1)
+    stats = mr.run_job(store, QUERY, reduce_fn=_rowids)
+    np.testing.assert_array_equal(stats.results["reduce"], oracle(QUERY))
+    assert stats.blocks_quarantined == 1
+
+
+def test_truncated_checksums_treated_as_corrupt(raw, oracle):
+    """Intact data whose checksums are lost is UNPROVABLE data: it must be
+    quarantined and repaired (fresh checksums included), not trusted."""
+    store = _eager(raw)
+    FaultInjector(store, seed=3).truncate_checksums(0, 0, "sourceIP")
+    stats = mr.run_job(store, QUERY, reduce_fn=_rowids)
+    np.testing.assert_array_equal(stats.results["reduce"], oracle(QUERY))
+    assert store.is_quarantined(0, 0)
+    rs = store.repair_blocks()
+    assert rs.blocks_repaired == 1
+    assert store.verify_block(0, 0)
+
+
+def test_all_replicas_corrupt_raises_not_wrong_rows(raw):
+    store = _eager(raw)
+    FaultInjector(store, seed=4).corrupt_replicas(
+        1, store.replication, "visitDate")
+    with pytest.raises(UnrecoverableDataError):
+        mr.run_job(store, QUERY)
+
+
+def test_retry_budget_bounded(raw):
+    """Satellite: replicas dying faster than the retry budget must surface
+    a typed error, not loop.  max_retries=0 means the FIRST corruption
+    retry already exceeds the budget."""
+    store = _eager(raw)
+    FaultInjector(store, seed=5).corrupt_chunk(0, 2, "visitDate")
+    with pytest.raises(UnrecoverableDataError):
+        mr.run_job(store, QUERY, recovery=RecoveryConfig(max_retries=0))
+
+
+def test_corruption_composes_with_node_failure(raw, oracle):
+    store = _eager(raw)
+    inj = FaultInjector(store, seed=6)
+    inj.corrupt_chunk(1, 3)                  # rot on replica 1 ...
+    stats = mr.run_job(store, QUERY, fail_node_at=0.5,  # ... plus a dead node
+                       reduce_fn=_rowids)
+    np.testing.assert_array_equal(stats.results["reduce"], oracle(QUERY))
+    assert not store.namenode.dead           # revived at job end
+
+
+# ---------------------------------------------------------------------------
+# repair preserves the per-replica clustered index
+# ---------------------------------------------------------------------------
+
+
+def test_repair_matches_fresh_eager_upload(raw, oracle):
+    """Acceptance: after repair, the victim replica's sort_key, indexed
+    flags, root directory, columns and checksums equal a freshly uploaded
+    eager store's, and the governor's AccessLog recency survives."""
+    store = _eager(raw)
+    # build up AccessLog recency with real traffic
+    mr.run_job(store, QUERY)
+    log_before = dict(store.access_log.counts)
+    inj = FaultInjector(store, seed=7)
+    inj.corrupt_column(0, 3, "adRevenue")    # whole-column rot
+    inj.corrupt_root(1, 0)                   # directory rot, other replica
+    for rid, b in ((0, 3), (1, 0)):
+        store.quarantine_block(rid, b)
+    rs = store.repair_blocks()
+    assert rs.blocks_repaired == 2 and rs.unrepairable == 0
+    assert not store.namenode.quarantined
+
+    fresh = _eager(raw)
+    for rid in range(store.replication):
+        got, want = store.replicas[rid], fresh.replicas[rid]
+        assert got.sort_key == want.sort_key
+        np.testing.assert_array_equal(got.indexed, want.indexed)
+        np.testing.assert_array_equal(np.asarray(got.mins),
+                                      np.asarray(want.mins))
+        for c in want.cols:
+            np.testing.assert_array_equal(np.asarray(got.cols[c]),
+                                          np.asarray(want.cols[c]))
+            np.testing.assert_array_equal(np.asarray(got.checksums[c]),
+                                          np.asarray(want.checksums[c]))
+    assert dict(store.access_log.counts) == log_before  # recency preserved
+    stats = mr.run_job(store, QUERY, reduce_fn=_rowids)
+    np.testing.assert_array_equal(stats.results["reduce"], oracle(QUERY))
+
+
+def test_repair_unindexed_block_restores_upload_order(raw):
+    store = _lazy(raw)
+    FaultInjector(store, seed=8).corrupt_chunk(2, 1)
+    store.quarantine_block(2, 1)
+    rs = store.repair_blocks()
+    assert rs.blocks_repaired == 1
+    fresh = _lazy(raw)
+    for c in fresh.replicas[2].cols:
+        np.testing.assert_array_equal(
+            np.asarray(store.replicas[2].cols[c]),
+            np.asarray(fresh.replicas[2].cols[c]))
+    assert store.verify_block(2, 1)
+
+
+def test_unrepairable_block_stays_quarantined(raw):
+    store = _eager(raw)
+    inj = FaultInjector(store, seed=9)
+    inj.corrupt_replicas(2, store.replication, "visitDate")  # no donor left
+    for rid in range(store.replication):
+        store.quarantine_block(rid, 2)
+    rs = store.repair_blocks()
+    assert rs.blocks_repaired == 0
+    assert rs.unrepairable == store.replication
+    assert len(store.namenode.quarantined) == store.replication
+    with pytest.raises(UnrecoverableDataError):
+        q.plan(store, QUERY)
+
+
+# ---------------------------------------------------------------------------
+# demote x quarantine interop (satellite regression)
+# ---------------------------------------------------------------------------
+
+
+def test_demoted_quarantined_replica_stays_out_until_repaired(raw, oracle):
+    """Regression: a replica demoted WHILE quarantined must not resurface
+    in planning until repaired — and demotion must not launder the corrupt
+    block by re-checksumming it."""
+    store = _eager(raw)
+    FaultInjector(store, seed=10).corrupt_chunk(0, 1, "visitDate")
+    store.quarantine_block(0, 1)
+    dropped = store.demote_replica(0)
+    assert dropped == BLOCKS                 # budget freed for all blocks
+    assert store.is_quarantined(0, 1)        # quarantine survives demotion
+    assert store.replica_for("visitDate") is None
+    plan = q.plan(store, QUERY)
+    assert plan.replica_for_block[1] != 0    # still excluded from planning
+    # demotion did NOT recompute checksums over the corrupt bytes
+    assert not store.verify_block(0, 1)
+    rs = store.repair_blocks()               # repairs to upload order now
+    assert rs.blocks_repaired == 1
+    assert store.verify_block(0, 1)
+    assert 0 in store.alive_replica_ids(1)   # back in service
+    # the replica re-claims through the ordinary adaptive path
+    mr.run_job(store, QUERY, adaptive=mr.AdaptiveConfig(offer_rate=1.0))
+    stats = mr.run_job(store, QUERY, reduce_fn=_rowids)
+    np.testing.assert_array_equal(stats.results["reduce"], oracle(QUERY))
+
+
+def test_commit_skips_quarantined_blocks(raw):
+    store = _lazy(raw)
+    FaultInjector(store, seed=11).corrupt_chunk(0, 2, "visitDate")
+    for _ in range(2):                       # enough budget for every block
+        mr.run_job(store, QUERY, adaptive=mr.AdaptiveConfig(offer_rate=1.0))
+    rep = store.replicas[0]
+    assert store.is_quarantined(0, 2)        # build-path verify caught it
+    assert not rep.indexed[2]                # and refused to index it
+    assert rep.indexed.sum() == BLOCKS - 1   # the clean blocks committed
+
+
+# ---------------------------------------------------------------------------
+# server + cache + scrubber
+# ---------------------------------------------------------------------------
+
+
+def test_server_flush_recovers_cold_cache(raw, oracle):
+    store = _eager(raw)
+    srv = HailServer(store, ServerConfig(max_batch=2))
+    queries = [q.HailQuery(filter=("visitDate", 7500 + 300 * i,
+                                   8700 + 300 * i),
+                           projection=("sourceIP",)) for i in range(2)]
+    FaultInjector(store, seed=12).corrupt_chunk(0, 0, "visitDate")
+    tickets = [srv.submit(qq) for qq in queries]
+    fs = srv.flush()
+    assert fs.blocks_quarantined == 1 and fs.corrupt_retries >= 1
+    for t, qq in zip(tickets, queries):
+        np.testing.assert_array_equal(np.sort(t.result.rows[ROWID]),
+                                      oracle(qq))
+
+
+def test_verification_amortized_to_cache_fills(raw):
+    """Acceptance: verification runs on BlockCache FILLS only — a warm
+    flush repeats zero verify dispatches (cached gathers were proven at
+    fill time), which is why the clean-path tax is bounded."""
+    store = _eager(raw)
+    srv = HailServer(store, ServerConfig(max_batch=2))
+    queries = [q.HailQuery(filter=("visitDate", 7600 + 100 * i,
+                                   8800 + 100 * i),
+                           projection=("sourceIP",)) for i in range(2)]
+    for qq in queries:
+        srv.submit(qq)
+    with ops.stats_scope() as cold:
+        srv.flush()
+    assert cold.dispatches["verify_blocks"] > 0
+    for qq in queries:
+        srv.submit(qq)
+    with ops.stats_scope() as warm:
+        srv.flush()
+    assert warm.dispatches["verify_blocks"] == 0
+    assert warm.dispatches["cache_hits"] > 0
+
+
+def test_scrubber_finds_cold_corruption_before_queries(raw):
+    store = _eager(raw)
+    scrub = Scrubber(store, ScrubConfig(blocks_per_tick=4)).attach()
+    FaultInjector(store, seed=13).corrupt_chunk(2, 3, "adRevenue")
+    # no query ever touches the corrupt copy; the scrubber must still find
+    # it within one full revolution and repair it
+    for _ in range(3 * BLOCKS // 4 + 1):
+        scrub.tick()
+    assert scrub.stats.blocks_quarantined == 1
+    assert scrub.stats.blocks_repaired == 1
+    assert not store.namenode.quarantined
+    assert all(store.verify_block(r, b)
+               for r in range(store.replication) for b in range(BLOCKS))
+
+
+def test_job_boundary_scrub_ticks(raw):
+    store = _eager(raw)
+    scrub = Scrubber(store, ScrubConfig(blocks_per_tick=2)).attach()
+    stats = mr.run_job(store, QUERY)
+    assert stats.scrub_s > 0.0
+    assert scrub.stats.ticks == 1
+    stats = mr.run_job(store, QUERY,
+                       recovery=RecoveryConfig(scrub=False))
+    assert stats.scrub_s == 0.0
+    assert scrub.stats.ticks == 1            # scrub=False skips the tick
+
+
+def test_cache_invalidate_blocks_is_block_granular():
+    from repro.core.cache import BlockCache
+    cache = BlockCache()
+    cache.put((0, (0, 1), "visitDate", ("sourceIP",)), (np.zeros(4),))
+    cache.put((0, (2, 3), "visitDate", ("sourceIP",)), (np.zeros(4),))
+    cache.put((1, (0, 1), "visitDate", ("sourceIP",)), (np.zeros(4),))
+    cache.invalidate_blocks(0, [1])
+    assert cache.get((0, (0, 1), "visitDate", ("sourceIP",))) is None
+    assert cache.get((0, (2, 3), "visitDate", ("sourceIP",))) is not None
+    assert cache.get((1, (0, 1), "visitDate", ("sourceIP",))) is not None
+
+
+# ---------------------------------------------------------------------------
+# the chaos property test (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 10 ** 6))
+@settings(max_examples=4, deadline=None)
+def test_chaos_rowsets_always_match_oracle(raw, oracle, seed):
+    """Seeded corruption of up to R-1 replicas per block, interleaved with
+    adaptive commits, governor demotions and a node failure: every job's
+    row-set equals the pristine oracle's."""
+    rng = np.random.default_rng(seed)
+    store = _lazy(raw)
+    gv.govern(store, max_indexed_blocks=BLOCKS, claim_miss_jobs=1)
+    Scrubber(store, ScrubConfig(blocks_per_tick=2)).attach()
+    inj = FaultInjector(store, seed=seed)
+    queries = [q.HailQuery(filter=("visitDate", 7800, 8800),
+                           projection=("sourceIP",)),
+               q.HailQuery(filter=("sourceIP", 0, 2 ** 30),
+                           projection=("adRevenue",))]
+    victims = rng.permutation(BLOCKS)[:3]
+    fail_job = int(rng.integers(0, 5))
+    for j in range(5):
+        if j < len(victims):               # fresh victim block each round,
+            inj.corrupt_replicas(           # at most R-1 replicas corrupt
+                int(victims[j]), int(rng.integers(1, store.replication)))
+        query = queries[j % 2]              # alternating workload: commits,
+        stats = mr.run_job(                 # demotions, re-claims
+            store, query, reduce_fn=_rowids,
+            adaptive=mr.AdaptiveConfig(offer_rate=0.5),
+            fail_node_at=0.5 if j == fail_job else None)
+        np.testing.assert_array_equal(stats.results["reduce"],
+                                      oracle(query))
