@@ -48,8 +48,11 @@ def _warm_flush_makespan(store, queries, cluster):
     """Scheduler-bridged makespan of a WARM-cache flush (same per-task
     scheduling constant as bench_server, so ratios isolate the verify
     tax), plus the verify dispatches that flush issued."""
+    # result_cache off: this measures the warm SCAN path (block-cache hits
+    # + zero verify dispatches), which the result tier would short-circuit
     server = js.HailServer(store, js.ServerConfig(max_batch=len(queries),
-                                                  cluster=cluster))
+                                                  cluster=cluster,
+                                                  result_cache=False))
     for qq in queries:
         server.submit(qq)
     server.flush()                          # cold: compiles + fills cache

@@ -112,6 +112,14 @@ class AccessLog:
     def get(self, replica_id: int, col: str) -> Optional[AccessRecord]:
         return self.counts.get((replica_id, col))
 
+    def heat(self, replica_id: int, col: str) -> int:
+        """Lifetime read demand (hits + misses) for one (replica, column)
+        — the BlockCache's admission tie-break: the same frequency data
+        the governor's eviction policy reads, so cache admission and
+        index eviction agree on what "hot" means."""
+        rec = self.counts.get((replica_id, col))
+        return (rec.hits + rec.misses) if rec is not None else 0
+
     def col_totals(self, col: str) -> AccessRecord:
         """Aggregate over replicas (convergence dashboards / tests)."""
         out = AccessRecord()

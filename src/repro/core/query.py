@@ -377,6 +377,23 @@ def _gather_split_inputs(store: BlockStore, qplan: QueryPlan,
             np.concatenate(uidx_p, axis=0)[inv])
 
 
+def attribution_groups(qplan: QueryPlan, block_ids: Sequence[int]
+                       ) -> tuple[tuple[int, int, int], ...]:
+    """The per-replica (replica_id, index-scanned, full-scanned) block
+    counts ``_gather_split_inputs`` charges ONE query for this split — the
+    result cache stores this recipe with each materialized answer and the
+    server replays it through ``governor.attribute_read`` on every hit, so
+    cached traffic and scanned traffic feed the AccessLog identically."""
+    ids = np.asarray(block_ids)
+    rids = qplan.replica_for_block[ids]
+    out = []
+    for rid in np.unique(rids):
+        bsel = ids[rids == rid]
+        n_idx = int(np.asarray(qplan.index_scan[bsel], bool).sum())
+        out.append((int(rid), n_idx, len(bsel) - n_idx))
+    return tuple(out)
+
+
 def _empty_read(store: BlockStore, proj_cols: tuple,
                 rows: int) -> ReadResult:
     """Degenerate split: empty fixed-shape result."""

@@ -177,6 +177,20 @@ class BlockStore:
     #   (amortized to BlockCache fills when a cache is attached)
     scrubber: Any = None                   # runtime.scrubber.Scrubber when
     #   background verification is attached (ticks at job/flush boundaries)
+    result_cache: Any = None               # cache.ResultCache when a serving
+    #   layer caches materialized answers — dropped wholesale by every
+    #   destructive transition (and keyed by ``version`` as a backstop)
+    version: int = 0                       # bumped by every destructive
+    #   transition; part of the result-cache key, so answers filled against
+    #   an older store state are structurally unreachable
+
+    def _note_destructive(self):
+        """Every state transition that changes what a query would read
+        (index commit, demotion, quarantine, repair) funnels through here:
+        bump the store version and drop all materialized answers."""
+        self.version += 1
+        if self.result_cache is not None:
+            self.result_cache.invalidate_store()
 
     @property
     def replication(self) -> int:
@@ -221,6 +235,7 @@ class BlockStore:
         self.namenode.quarantine(block_id, node)
         if self.block_cache is not None:
             self.block_cache.invalidate_blocks(replica_id, [block_id])
+        self._note_destructive()
         from repro.kernels import ops
         ops.DISPATCH_COUNTS["blocks_quarantined"] += 1
 
@@ -332,6 +347,8 @@ class BlockStore:
                 self.__dict__.get("_bad_mask_cache", {}).pop(rid, None)
                 if self.block_cache is not None:
                     self.block_cache.invalidate_blocks(rid, repaired)
+        if stats.blocks_repaired:
+            self._note_destructive()
         stats.wall_s = _time.perf_counter() - t0
         return stats
 
@@ -424,6 +441,7 @@ class BlockStore:
         self.__dict__.get("_bad_mask_cache", {}).pop(replica_id, None)
         if self.block_cache is not None:
             self.block_cache.invalidate_replica(replica_id)
+        self._note_destructive()
         from repro.core import governor as gv
         gv.note_commit(self, replica_id, sort_key)
         return len(bsel)
@@ -486,6 +504,7 @@ class BlockStore:
         self.__dict__.get("_bad_mask_cache", {}).pop(replica_id, None)
         if self.block_cache is not None:
             self.block_cache.invalidate_replica(replica_id)
+        self._note_destructive()
         if self.access_log is not None:
             self.access_log.forget_replica(replica_id)
         if self.governor is not None:

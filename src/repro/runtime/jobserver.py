@@ -21,12 +21,25 @@ adaptive index builds.  The server closes the gap with three mechanisms:
   (the same re-plan/retry path ``run_job`` uses, exercised per batch).
 
 * **A governor-integrated hot-block cache** — decoded per-split reader
-  inputs live in a capacity-bounded LRU (``core/cache.BlockCache``)
-  attached to the store; hits skip the host-side gather entirely, misses
-  fill it, the store's destructive transitions (``commit_block_indexes``,
-  ``demote_replica``) invalidate the touched replica, and every read —
-  cached or not — is still attributed per query into the ``AccessLog``,
-  so the IndexGovernor's LRU signal sees cached traffic.
+  inputs live in a capacity-bounded, SCAN-RESISTANT segmented cache
+  (``core/cache.BlockCache``) attached to the store; hits skip the
+  host-side gather entirely, misses fill it, the store's destructive
+  transitions (``commit_block_indexes``, ``demote_replica``,
+  ``quarantine_block``, ``repair_blocks``) invalidate the touched
+  replica's entries, and every read — cached or not — is still attributed
+  per query into the ``AccessLog``, so the IndexGovernor's LRU signal
+  sees cached traffic.
+
+* **A query-result cache** — the second tier (``core/cache.ResultCache``):
+  materialized answers keyed (filter col, lo, hi, projection, store
+  version).  ``flush`` first tries to serve each pending query from it —
+  a repeated (or subsumed, when the filter column is projected) range
+  skips batching, planning and the fused scan entirely, with ZERO reader
+  dispatches — and replays the entry's fill-time attribution recipe
+  through ``governor.attribute_read``, so a hot-but-result-cached index
+  never looks LRU-cold to the governor.  Every destructive store
+  transition bumps ``BlockStore.version`` and drops the tier, so a stale
+  answer is structurally unreachable.
 
 Adaptive builds are budgeted at the WORKLOAD level ("Towards Zero-Overhead
 Adaptive Indexing" argues the build budget belongs to the workload, not
@@ -59,7 +72,7 @@ import numpy as np
 from repro.core import governor as gvn
 from repro.core import mapreduce as mr
 from repro.core import query as q
-from repro.core.cache import BlockCache
+from repro.core.cache import BlockCache, ResultCache
 from repro.core.fault import (CorruptBlockError, RecoveryConfig,
                               UnrecoverableDataError)
 from repro.core.query import HailQuery
@@ -82,8 +95,10 @@ class ServerConfig:
     width, reused forever after).  ``max_pending_per_tenant`` /
     ``max_pending_total``: admission-control quotas enforced by ``submit``.
     ``cache_bytes``: hot-block cache capacity (None = unbounded;
-    ``cache=False`` disables caching entirely).  ``adaptive``: when set,
-    flushes draw ONE shared build quantum (see module docstring).
+    ``cache=False`` disables caching entirely).  ``result_cache`` /
+    ``result_cache_bytes``: the materialized-answer tier, same knob shape
+    (benches that measure the scan path itself disable it).  ``adaptive``:
+    when set, flushes draw ONE shared build quantum (see module docstring).
     """
     max_batch: int = 8
     max_pending_per_tenant: int = 8
@@ -91,6 +106,8 @@ class ServerConfig:
     reader: str = "kernels"
     cache: bool = True
     cache_bytes: Optional[int] = None
+    result_cache: bool = True
+    result_cache_bytes: Optional[int] = None
     adaptive: Optional[mr.AdaptiveConfig] = None
     cluster: mr.ClusterModel = dataclasses.field(
         default_factory=mr.ClusterModel)
@@ -105,6 +122,7 @@ class QueryResult:
     rows: dict[str, np.ndarray]    # projection (+__rowid__) of matching rows
     batch_size: int                # Q of the shared-scan batch that served it
     n_splits: int                  # fused dispatches that batch issued
+    from_cache: bool = False       # served by the result cache (no scan)
 
 
 @dataclasses.dataclass
@@ -133,8 +151,10 @@ class FlushStats:
     batch_of_split: list = dataclasses.field(default_factory=list)
     # ^ batch width (Q) per executed split, aligned with split_s — the
     #   scheduler bridge stamps it into Task.n_queries
-    cache_hits: int = 0            # this flush's cache traffic
+    cache_hits: int = 0            # this flush's block-cache traffic
     cache_misses: int = 0
+    result_cache_hits: int = 0     # queries answered without any scan
+    result_cache_misses: int = 0
     wall_s: float = 0.0
     modeled_s: float = 0.0         # deterministic: scheduling + shared disk
     blocks_quarantined: int = 0    # corrupt (replica, block)s this flush found
@@ -183,6 +203,16 @@ class HailServer:
                     and existing.capacity_bytes != self.config.cache_bytes):
                 existing = BlockCache(self.config.cache_bytes).attach(store)
             self.cache = existing
+        self.result_cache: Optional[ResultCache] = None
+        if self.config.result_cache:
+            existing_rc = store.result_cache
+            if existing_rc is None or (
+                    self.config.result_cache_bytes is not None
+                    and existing_rc.capacity_bytes
+                    != self.config.result_cache_bytes):
+                existing_rc = ResultCache(
+                    self.config.result_cache_bytes).attach(store)
+            self.result_cache = existing_rc
 
     # -- admission ----------------------------------------------------------
 
@@ -237,7 +267,22 @@ class HailServer:
         retry path and cross-batch re-planning.
         """
         tickets, self._pending = self._pending, []
-        batches = self._batches(tickets)
+        # ONE governor job boundary per flush (not per batch): the flush is
+        # the user-visible workload unit, so a never-before-seen column
+        # cannot satisfy claim-time hysteresis with its own batches —
+        # "queries once" means "one flush", however many batches it takes.
+        # Opened BEFORE the result-cache short-circuit so replayed
+        # attribution lands in this job, like the scans it stands in for.
+        gvn.note_job_start(self.store)
+        rc = self.result_cache
+        rc_h0 = rc.stats.hits if rc else 0
+        rc_m0 = rc.stats.misses if rc else 0
+        t0 = time.perf_counter()
+        # tier 2 first: a repeated/subsumed range skips batching, planning
+        # and the fused scan entirely — only the misses get batched below
+        missed = [t for t in tickets
+                  if not self._serve_from_result_cache(t)]
+        batches = self._batches(missed)
         stats = FlushStats(n_queries=len(tickets), n_batches=len(batches),
                            n_splits=0,
                            batch_sizes=[len(b) for b in batches])
@@ -250,15 +295,9 @@ class HailServer:
             budget["left"] = mr.adaptive_quantum(self.store,
                                                  self.config.adaptive)
         fail = {"frac": fail_node_at, "node": None}
-        # ONE governor job boundary per flush (not per batch): the flush is
-        # the user-visible workload unit, so a never-before-seen column
-        # cannot satisfy claim-time hysteresis with its own batches —
-        # "queries once" means "one flush", however many batches it takes
-        gvn.note_job_start(self.store)
         # corruption retry budget is per FLUSH per block — corruption and
         # node-failure retries share it, like run_job's
         retries: collections.Counter = collections.Counter()
-        t0 = time.perf_counter()
         for batch in batches:
             self._run_batch(batch, stats, budget, fail, retries)
         stats.wall_s = time.perf_counter() - t0
@@ -278,7 +317,34 @@ class HailServer:
         if self.cache:
             stats.cache_hits = self.cache.stats.hits - cache_h0
             stats.cache_misses = self.cache.stats.misses - cache_m0
+        if rc:
+            stats.result_cache_hits = rc.stats.hits - rc_h0
+            stats.result_cache_misses = rc.stats.misses - rc_m0
         return stats
+
+    def _serve_from_result_cache(self, t: Ticket) -> bool:
+        """Try to answer one ticket from the materialized-result tier.
+
+        On a hit the ticket completes with ZERO reader dispatches; the
+        entry's fill-time attribution recipe is replayed through
+        ``governor.attribute_read`` so the AccessLog (and reader_stats)
+        sees the same per-(replica, column) traffic the scan would have
+        generated — a hot-but-result-cached index never looks LRU-cold."""
+        rc = self.result_cache
+        if (rc is None or self.store.layout != "pax"
+                or t.query.filter is None):
+            return False               # not result-cacheable: no miss counted
+        col, lo, hi = t.query.filter
+        ent = rc.lookup(col, lo, hi, tuple(t.query.projection),
+                        self.store.version)
+        if ent is None:
+            return False
+        for rid, n_idx, n_full in ent.attribution:
+            gvn.attribute_read(self.store, rid, col, n_idx, n_full)
+        t.result = QueryResult(n_rows=ent.n_rows, rows=dict(ent.rows),
+                               batch_size=0, n_splits=0, from_cache=True)
+        t.status = "done"
+        return True
 
     def _read_batch(self, queries, qplan, ids):
         """-> (per-query ReadResults, physical shared bytes) for one split.
@@ -394,6 +460,20 @@ class HailServer:
             stats.bytes_read += int(shared)
             for qi, r in enumerate(res):
                 per_query[qi].append(r)
+        rc = self.result_cache
+        recipe = None
+        if (rc is not None and store.layout == "pax"
+                and query0.filter is not None):
+            # the attribution recipe a HIT will replay — recomputed against
+            # a FRESH plan, because mid-batch commits/quarantines bumped
+            # ``store.version`` past the plan the reads actually used, and
+            # the entry keyed at the CURRENT version must describe what a
+            # scan at the current version would attribute
+            try:
+                recipe = q.attribution_groups(
+                    q.plan(store, query0), np.arange(store.n_blocks))
+            except UnrecoverableDataError:
+                recipe = None          # can't describe a fresh scan: no fill
         for ticket, parts in zip(batch, per_query):
             masks = [np.asarray(r.mask).reshape(-1) for r in parts]
             rows: dict[str, np.ndarray] = {}
@@ -407,3 +487,7 @@ class HailServer:
                                         batch_size=len(batch),
                                         n_splits=n_splits)
             ticket.status = "done"
+            if recipe is not None:
+                col, lo, hi = ticket.query.filter
+                rc.put(col, lo, hi, tuple(ticket.query.projection),
+                       store.version, rows, recipe)

@@ -1,0 +1,297 @@
+"""Unit tests for the tiered serving-layer caches (core/cache.py).
+
+Covers the SLRU mechanics and scan-resistant admission of ``BlockCache``
+(the fix for the half-budget pure-LRU thrash bench_server documented:
+0.0 hit rate, 186 evictions), the byte-accounting invariant under every
+mutation kind (``recount()`` oracle), block-granular invalidation with
+true-residual re-accounting, and the ``ResultCache`` tier's exact /
+subsumed / version-keyed lookup semantics.  Integration behavior (server
+flushes, governor attribution replay, corruption races) lives in
+test_server.py / test_fault.py.
+"""
+import numpy as np
+import pytest
+
+from repro.core.cache import BlockCache, ResultCache, _nbytes
+
+
+def _val(n_blocks: int, width: int = 4):
+    """A pytree-ish cached value: leading axis = gathered blocks."""
+    return {"key": np.arange(n_blocks * width, dtype=np.int64)
+            .reshape(n_blocks, width),
+            "mask": np.ones((n_blocks, width), dtype=np.int64)}
+
+
+UNIT = _nbytes(_val(1))          # bytes of a one-block value
+
+
+class _Log:
+    def __init__(self, heats):
+        self._h = dict(heats)
+
+    def heat(self, rid, col):
+        return self._h.get((rid, col), 0)
+
+
+class _Store:
+    """Just enough store for the admission filter's heat tie-break."""
+    def __init__(self, heats=()):
+        self.access_log = _Log(heats)
+        self.block_cache = None
+
+
+def _key(rid=0, blocks=(0,), col="c", proj=("p",)):
+    return (rid, tuple(blocks), col, proj)
+
+
+# ---------------------------------------------------------------------------
+# SLRU mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_slru_promotion_and_protected_overflow_demotion():
+    # capacity 2 entries, protected capped at 1 entry (frac 0.5)
+    c = BlockCache(capacity_bytes=2 * UNIT, protected_frac=0.5)
+    a, b = _key(blocks=(0,)), _key(blocks=(1,))
+    c.put(a, _val(1))
+    c.put(b, _val(1))
+    assert a in c._probation and b in c._probation
+
+    assert c.get(a) is not None          # proven reuse: promote
+    assert a in c._protected and c.stats.promotions == 1
+
+    # promoting b overflows the protected segment -> its LRU (a) demotes
+    # back to probation MRU: still RESIDENT, but evictable again
+    assert c.get(b) is not None
+    assert b in c._protected and a in c._probation
+    assert c.stats.promotions == 2 and len(c) == 2
+    assert c.recount() == c.stats.bytes_cached == 2 * UNIT
+
+
+def test_refresh_with_larger_value_still_respects_capacity():
+    c = BlockCache(capacity_bytes=3 * UNIT, scan_resistant=False)
+    a, b = _key(blocks=(0,)), _key(blocks=(1,))
+    c.put(a, _val(1))
+    c.put(b, _val(1))
+    c.put(a, _val(2))                    # refresh GROWS a to 2 units
+    assert c.stats.bytes_cached <= c.capacity_bytes
+    assert c.recount() == c.stats.bytes_cached
+    assert a in c                        # the refreshed entry survives
+    c.put(a, _val(3))                    # grows to the full budget
+    assert c.stats.bytes_cached == 3 * UNIT and b not in c
+
+
+# ---------------------------------------------------------------------------
+# Scan-resistant admission
+# ---------------------------------------------------------------------------
+
+
+def test_one_touch_scan_cannot_evict_proven_reuse():
+    c = BlockCache(capacity_bytes=2 * UNIT)
+    hot = [_key(blocks=(i,)) for i in (0, 1)]
+    for k in hot:
+        c.get(k)                         # miss: ghost freq 1
+        c.put(k, _val(1))
+    for k in hot:
+        assert c.get(k) is not None      # ghost freq 2, promoted
+
+    # a sequential one-touch scan streams 10 cold candidates: every one
+    # must be REJECTED (freq 1 < resident freq 2), residents stay hot
+    for i in range(10, 20):
+        k = _key(blocks=(i,))
+        assert c.get(k) is None
+        c.put(k, _val(1))
+    assert c.stats.admission_rejects == 10
+    assert c.stats.evictions == 0
+    for k in hot:
+        assert c.get(k) is not None
+
+
+def test_frequent_candidate_displaces_one_touch_resident():
+    c = BlockCache(capacity_bytes=2 * UNIT)
+    a, b, cand = (_key(blocks=(i,)) for i in (0, 1, 2))
+    c.put(a, _val(1))                    # never demanded: freq 0
+    c.put(b, _val(1))
+    for _ in range(3):
+        c.get(cand)                      # three demands: freq 3
+    c.put(cand, _val(1))
+    assert cand in c and a not in c      # probation LRU evicted
+    assert c.stats.evictions == 1 and c.stats.admission_rejects == 0
+    assert c.recount() == c.stats.bytes_cached == 2 * UNIT
+
+
+def test_admission_tie_broken_by_governor_column_heat():
+    heats = {(0, "hot"): 5}
+    resident = _key(rid=0, blocks=(0,), col="cold")
+    cand_hot = _key(rid=0, blocks=(1,), col="hot")
+    cand_cold = _key(rid=0, blocks=(2,), col="cold")
+
+    # equal ghost frequency, hotter column -> admitted, resident evicted
+    c = BlockCache(capacity_bytes=UNIT).attach(_Store(heats))
+    c.get(resident)
+    c.put(resident, _val(1))
+    c.get(cand_hot)
+    c.put(cand_hot, _val(1))
+    assert cand_hot in c and resident not in c
+
+    # equal ghost frequency, equal heat -> rejected, resident stays
+    c = BlockCache(capacity_bytes=UNIT).attach(_Store(heats))
+    c.get(resident)
+    c.put(resident, _val(1))
+    c.get(cand_cold)
+    c.put(cand_cold, _val(1))
+    assert resident in c and cand_cold not in c
+    assert c.stats.admission_rejects == 1
+
+
+def test_half_budget_sequential_loop_pure_lru_vs_scan_resistant():
+    """The bench failure mode in miniature: 4 one-unit working-set keys
+    looped sequentially through a 2-unit budget."""
+    keys = [_key(blocks=(i,)) for i in range(4)]
+
+    def loop(cache, rounds=3):
+        for _ in range(rounds):
+            for k in keys:
+                if cache.get(k) is None:
+                    cache.put(k, _val(1))
+        return cache.stats
+
+    lru = loop(BlockCache(capacity_bytes=2 * UNIT, scan_resistant=False))
+    assert lru.hit_rate == 0.0 and lru.evictions > 0   # the old thrash
+
+    slru = loop(BlockCache(capacity_bytes=2 * UNIT))
+    assert slru.hit_rate > 0.0                         # residents stay hot
+    assert slru.admission_rejects > 0 and slru.evictions == 0
+
+
+# ---------------------------------------------------------------------------
+# Byte accounting (satellite: drift after block-granular invalidation)
+# ---------------------------------------------------------------------------
+
+
+def test_invalidate_blocks_reaccounts_true_residual_bytes():
+    c = BlockCache()
+    k = _key(rid=0, blocks=(0, 1, 2))
+    c.put(k, _val(3))
+    assert c.stats.bytes_cached == 3 * UNIT
+
+    c.invalidate_blocks(0, [1])
+    assert k not in c
+    rk = _key(rid=0, blocks=(0, 2))
+    assert rk in c
+    # the residual is charged at its TRUE sliced size, not the
+    # at-admission size — this was the accounting-drift bug
+    assert c.stats.bytes_cached == 2 * UNIT
+    assert c.recount() == c.stats.bytes_cached
+    assert c.stats.invalidations == 1 and c.stats.partial_invalidations == 1
+
+    # and the surviving rows are blocks 0 and 2 of the original gather
+    residual = c.get(rk)
+    np.testing.assert_array_equal(residual["key"],
+                                  _val(3)["key"][np.asarray([0, 2])])
+
+
+def test_invalidate_blocks_residual_key_collision_drops_duplicate():
+    c = BlockCache()
+    c.put(_key(blocks=(0, 2)), _val(2))      # residual key already cached
+    c.put(_key(blocks=(0, 1, 2)), _val(3))
+    c.invalidate_blocks(0, [1])
+    assert len(c) == 1 and _key(blocks=(0, 2)) in c
+    assert c.stats.bytes_cached == 2 * UNIT == c.recount()
+
+
+def test_byte_accounting_invariant_under_random_mutation():
+    """Property loop: after EVERY mutation kind, the stored per-entry
+    sizes must recount to ``stats.bytes_cached`` and the capacity bound
+    must hold."""
+    rng = np.random.default_rng(7)
+    cap = 10 * UNIT
+    c = BlockCache(capacity_bytes=cap).attach(_Store())
+    for step in range(300):
+        op = rng.integers(0, 10)
+        rid = int(rng.integers(0, 3))
+        if op <= 4:                                     # get-then-maybe-put
+            blocks = tuple(sorted(rng.choice(
+                6, size=int(rng.integers(1, 4)), replace=False).tolist()))
+            k = _key(rid=rid, blocks=blocks, col=f"c{rng.integers(0, 2)}")
+            if c.get(k) is None:
+                c.put(k, _val(len(blocks), width=int(rng.integers(2, 6))))
+        elif op <= 6:
+            c.invalidate_blocks(rid, rng.choice(
+                6, size=int(rng.integers(1, 3)), replace=False).tolist())
+        elif op <= 8:
+            c.invalidate_replica(rid)
+        else:
+            c.clear()
+        assert c.recount() == c.stats.bytes_cached, f"drift at step {step}"
+        assert c.stats.bytes_cached <= cap
+    assert c.stats.hits > 0 and c.stats.invalidations > 0
+    assert c.stats.partial_invalidations > 0
+
+
+# ---------------------------------------------------------------------------
+# Tier 2: ResultCache
+# ---------------------------------------------------------------------------
+
+
+def _rows(vals, rowids):
+    return {"c": np.asarray(vals), "__rowid__": np.asarray(rowids)}
+
+
+def test_result_cache_exact_subsumed_and_version_semantics():
+    rc = ResultCache()
+    rc.put("c", 0, 10, ("c",), 0, _rows([1, 5, 9], [10, 11, 12]),
+           ((0, 2, 1),))
+
+    exact = rc.lookup("c", 0, 10, ("c",), 0)
+    assert exact is not None and exact.n_rows == 3
+    assert exact.attribution == ((0, 2, 1),)
+
+    # a contained range narrows the cached superset by re-filtering
+    sub = rc.lookup("c", 2, 6, ("c",), 0)
+    assert sub is not None and sub.n_rows == 1
+    np.testing.assert_array_equal(sub.rows["c"], [5])
+    np.testing.assert_array_equal(sub.rows["__rowid__"], [11])
+    assert sub.attribution == ((0, 2, 1),)
+    assert rc.stats.subsumed_hits == 1 and rc.stats.hits == 2
+
+    # a bumped store version makes every older entry unreachable
+    assert rc.lookup("c", 0, 10, ("c",), 1) is None
+    assert rc.stats.misses == 1
+
+
+def test_result_cache_no_subsumption_without_filter_column_projected():
+    rc = ResultCache()
+    rc.put("c", 0, 10, ("x",), 0, {"x": np.arange(3),
+                                   "__rowid__": np.arange(3)}, ())
+    # exact repeat works regardless of projection...
+    assert rc.lookup("c", 0, 10, ("x",), 0) is not None
+    # ...but narrowing needs the filter column's values, which ("x",)
+    # projections don't carry
+    assert rc.lookup("c", 2, 6, ("x",), 0) is None
+
+
+def test_result_cache_lru_capacity_and_invalidate():
+    one = _nbytes(_rows([1], [1]))
+    rc = ResultCache(capacity_bytes=2 * one)
+    for i in range(3):
+        rc.put("c", i, i, ("c",), 0, _rows([i], [i]), ())
+    assert len(rc) == 2 and rc.stats.evictions == 1
+    assert rc.stats.bytes_cached == 2 * one
+    assert rc.lookup("c", 0, 0, ("c",), 0) is None      # LRU'd out
+    assert rc.lookup("c", 2, 2, ("c",), 0) is not None
+
+    rc.invalidate_store()
+    assert len(rc) == 0 and rc.stats.bytes_cached == 0
+    assert rc.stats.invalidations == 2
+
+
+def test_result_cache_oversized_entry_not_admitted():
+    rows = _rows(list(range(100)), list(range(100)))
+    rc = ResultCache(capacity_bytes=_nbytes(rows) - 1)
+    rc.put("c", 0, 99, ("c",), 0, rows, ())
+    assert len(rc) == 0 and rc.stats.bytes_cached == 0
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

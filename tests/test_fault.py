@@ -316,9 +316,11 @@ def test_server_flush_recovers_cold_cache(raw, oracle):
 def test_verification_amortized_to_cache_fills(raw):
     """Acceptance: verification runs on BlockCache FILLS only — a warm
     flush repeats zero verify dispatches (cached gathers were proven at
-    fill time), which is why the clean-path tax is bounded."""
+    fill time), which is why the clean-path tax is bounded.
+    result_cache off: the warm flush must reach the block-cache tier (the
+    result tier would answer it before any gather happens)."""
     store = _eager(raw)
-    srv = HailServer(store, ServerConfig(max_batch=2))
+    srv = HailServer(store, ServerConfig(max_batch=2, result_cache=False))
     queries = [q.HailQuery(filter=("visitDate", 7600 + 100 * i,
                                    8800 + 100 * i),
                            projection=("sourceIP",)) for i in range(2)]
@@ -333,6 +335,69 @@ def test_verification_amortized_to_cache_fills(raw):
         srv.flush()
     assert warm.dispatches["verify_blocks"] == 0
     assert warm.dispatches["cache_hits"] > 0
+
+
+def test_result_cache_invalidated_by_quarantine_and_repair(raw, oracle):
+    """The result tier is dropped by BOTH corruption-side transitions:
+    quarantine (the cached answer's plan just lost a replica) and repair
+    (the store's bytes changed back).  Either way the next repeat query
+    re-scans and stays exact — and once the store is stable again, the
+    repeat is a zero-dispatch hit once more.  Block cache OFF so every
+    scan verifies (a warm tier-1 gather would hide the corruption from
+    this flush — detection is amortized to fills by design)."""
+    store = _eager(raw)
+    srv = HailServer(store, ServerConfig(max_batch=2, cache=False))
+    t0 = srv.submit(QUERY)
+    srv.flush()                               # fill at version v0
+    assert not t0.result.from_cache
+    t1 = srv.submit(QUERY)
+    with ops.stats_scope() as s:
+        srv.flush()
+    assert t1.result.from_cache and s.dispatches["hail_read"] == 0
+
+    # inject corruption: the cached answer PREDATES it and nothing has
+    # scanned the corrupt copy yet, so serving the repeat from cache is
+    # still exact (a scan would detect, re-plan, and compute these rows)
+    v0 = store.version
+    FaultInjector(store, seed=21).corrupt_chunk(0, 1, "visitDate")
+    t2 = srv.submit(QUERY)
+    srv.flush()
+    assert t2.result.from_cache and store.version == v0
+    np.testing.assert_array_equal(np.sort(t2.result.rows[ROWID]),
+                                  oracle(QUERY))
+
+    # a NEW range scans, detects, quarantines: version bumps, tier drops —
+    # now the old repeat must RE-SCAN (against the re-planned replica set)
+    probe = q.HailQuery(filter=("visitDate", 7900, 9100),
+                        projection=("sourceIP",))
+    tp = srv.submit(probe)
+    fs = srv.flush()
+    assert fs.blocks_quarantined == 1 and store.version > v0
+    np.testing.assert_array_equal(np.sort(tp.result.rows[ROWID]),
+                                  oracle(probe))
+    t3 = srv.submit(QUERY)
+    srv.flush()
+    assert not t3.result.from_cache
+    np.testing.assert_array_equal(np.sort(t3.result.rows[ROWID]),
+                                  oracle(QUERY))
+
+    # repair restores the block and bumps the version again: everything
+    # filled against the quarantined plan is unreachable and dropped
+    v_q = store.version
+    rs = store.repair_blocks()
+    assert rs.blocks_repaired == 1 and store.version > v_q
+    assert len(store.result_cache) == 0
+    t4 = srv.submit(QUERY)
+    srv.flush()
+    assert not t4.result.from_cache           # re-scan on the healed store
+    np.testing.assert_array_equal(np.sort(t4.result.rows[ROWID]),
+                                  oracle(QUERY))
+    t5 = srv.submit(QUERY)
+    with ops.stats_scope() as s:
+        srv.flush()
+    assert t5.result.from_cache and s.dispatches["hail_read"] == 0
+    np.testing.assert_array_equal(np.sort(t5.result.rows[ROWID]),
+                                  oracle(QUERY))
 
 
 def test_scrubber_finds_cold_corruption_before_queries(raw):
