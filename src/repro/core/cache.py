@@ -51,7 +51,11 @@ SURVIVING blocks of a partially hit entry re-keyed and re-accounted at
 their true residual byte size); the ResultCache is dropped wholesale and
 additionally keyed by ``BlockStore.version``, which those transitions
 bump — a stale result is unreachable even if an invalidation hook is
-bypassed.  Cache traffic is still GOVERNED traffic: hits and misses land
+bypassed.  Cache-owned buffers are MUTATION-PROOF: BlockCache values are
+immutable ``jax.Array``s by construction, and ResultCache entries freeze
+their numpy arrays at fill (``writeable=False``), so a caller scribbling on
+a served answer raises instead of corrupting every future hit for that
+key.  Cache traffic is still GOVERNED traffic: hits and misses land
 in ``kernels.ops`` ``reader_stats`` (``cache_hits`` / ``cache_misses`` /
 ``result_cache_hits`` / ``result_cache_misses``), always attributed to the
 innermost ``stats_scope``.
@@ -447,7 +451,14 @@ class ResultCache:
                     self._entries.move_to_end(k)
                     vals = donor.rows[col]
                     m = (vals >= lo) & (vals <= hi)
-                    rows = {c: v[m] for c, v in donor.rows.items()}
+                    # fancy indexing copies, so there is no aliasing here;
+                    # freeze anyway so exact and subsumed hits expose the
+                    # same read-only contract
+                    rows = {}
+                    for c, v in donor.rows.items():
+                        nv = v[m]
+                        nv.setflags(write=False)
+                        rows[c] = nv
                     self.stats.hits += 1
                     self.stats.subsumed_hits += 1
                     ops.DISPATCH_COUNTS["result_cache_hits"] += 1
@@ -462,6 +473,15 @@ class ResultCache:
         nbytes = _nbytes(rows)
         if self.capacity_bytes is not None and nbytes > self.capacity_bytes:
             return
+        # The entry OWNS these arrays from here on, and hits hand them back
+        # without copying (a shallow dict copy shares the buffers).  Freeze
+        # them so a caller mutating its answer raises instead of silently
+        # corrupting every future hit for this key.  (Tier 1 needs no such
+        # guard: BlockCache values are jax.Arrays, immutable by
+        # construction — see _gather_replica_inputs.)
+        for v in rows.values():
+            if isinstance(v, np.ndarray):
+                v.setflags(write=False)
         key = self.make_key(col, lo, hi, projection, version)
         old = self._entries.pop(key, None)
         if old is not None:

@@ -275,7 +275,8 @@ def run_job(store: BlockStore, query: q.HailQuery, *,
             fail_node_at: Optional[float] = None,
             reader: str = "jnp",
             adaptive: Optional[AdaptiveConfig] = None,
-            recovery: RecoveryConfig = RecoveryConfig()) -> JobStats:
+            recovery: RecoveryConfig = RecoveryConfig(),
+            on_split_complete: Optional[Callable] = None) -> JobStats:
     """Execute filter/project (+optional reduce) over all blocks.
 
     reader: 'jnp' (batched jnp record reader) or 'kernels' (fused Pallas
@@ -307,6 +308,14 @@ def run_job(store: BlockStore, query: q.HailQuery, *,
     ``recovery.scrub`` and a scrubber attached (``store.scrubber``), the
     job boundary also verifies a budgeted batch of cold blocks and repairs
     whatever is quarantined (``JobStats.scrub_s``).
+
+    on_split_complete: streaming hook — called once per executed split, in
+    completion order, as each result's barrier clears (NOT at job end),
+    with ``(split_index, read_result, split_wall_s)``.  This is the split-
+    granular completion signal the HailServer's streaming assembly and the
+    ServerFrontend's per-query latency accounting are built on; exposed
+    here so callers of the serial executor can consume results
+    incrementally too.
     """
     import collections as _collections
     from repro.core import governor as gvn
@@ -425,12 +434,14 @@ def run_job(store: BlockStore, query: q.HailQuery, *,
     # --- completion phase: one pass of barriers over the queued results ---
     bytes_read = 0
     masks, cols, split_s = [], [], []
-    for res, t_disp in dispatched:
+    for k, (res, t_disp) in enumerate(dispatched):
         jax.block_until_ready(res.mask)
         split_s.append(time.perf_counter() - t_disp)
         bytes_read += int(res.bytes_read)   # lazy scalar -> host, post-barrier
         masks.append(np.asarray(res.mask))
         cols.append({c: np.asarray(v) for c, v in res.cols.items()})
+        if on_split_complete is not None:
+            on_split_complete(k, res, split_s[-1])
     compute_s = time.perf_counter() - t_start
 
     n_tasks = len(pending)

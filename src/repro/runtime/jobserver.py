@@ -48,6 +48,17 @@ the job): one ``offer_rate`` quantum is drawn per flush
 order — eight concurrent tenants advance convergence by one job's worth,
 not eight.
 
+``ServerFrontend`` puts an ASYNC, latency-SLO event loop on top: callers
+``offer`` queries with simulated arrival times and a ``FlushPolicy`` decides
+when flushes fire — when the OLDEST pending query has waited ``window_s``
+(the SLO knob) or a compatible batch fills to ``max_batch`` — instead of a
+caller-driven ``flush()`` being the only trigger (``flush`` stays, for tests
+and for the frontend's own cycles).  Per-query answers STREAM back as the
+last split each query depends on completes (``FlushStats.query_done_s``, and
+the scheduler bridge's ``query_completion_s``), not at a flush-end barrier;
+and when pending work exceeds one flush's capacity, weighted-fair admission
+(per-tenant virtual time) decides which batches dispatch first.
+
 Each FLUSH is one job boundary for the governor (``note_job_start``) —
 the flush is the user-visible workload unit, so claim-time eviction
 hysteresis applies to server traffic exactly as to serial jobs: a column
@@ -76,9 +87,11 @@ from repro.core.cache import BlockCache, ResultCache
 from repro.core.fault import (CorruptBlockError, RecoveryConfig,
                               UnrecoverableDataError)
 from repro.core.query import HailQuery
+from repro.core.schema import ROWID
 from repro.core.splitting import Split, hadoop_splits, hail_splits
 from repro.core.store import BlockStore
-from repro.runtime.scheduler import Task
+from repro.runtime.cluster import SimulatedCluster
+from repro.runtime.scheduler import Task, run_schedule
 
 
 class AdmissionError(RuntimeError):
@@ -130,8 +143,11 @@ class Ticket:
     ticket_id: int
     tenant: str
     query: HailQuery
-    status: str = "queued"         # queued -> done
+    status: str = "queued"         # queued -> done | failed
     result: Optional[QueryResult] = None
+    error: Optional[str] = None    # typed terminal failure (retry budget
+    #   exhausted mid-flush) — set alongside status="failed", never silently
+    #   stranded "queued"
 
 
 @dataclasses.dataclass
@@ -151,6 +167,21 @@ class FlushStats:
     batch_of_split: list = dataclasses.field(default_factory=list)
     # ^ batch width (Q) per executed split, aligned with split_s — the
     #   scheduler bridge stamps it into Task.n_queries
+    queries_of_split: list = dataclasses.field(default_factory=list)
+    # ^ ticket ids whose answer DEPENDS on each executed split (its LIVE
+    #   members: key-range overlap, or any full-scan block), aligned with
+    #   split_s — the scheduler bridge stamps them into Task.query_ids so
+    #   run_schedule can emit per-query completion timestamps
+    query_done_s: dict = dataclasses.field(default_factory=dict)
+    # ^ ticket id -> wall seconds after flush start when its answer
+    #   FINALIZED (streamed back) — result-cache hits and fully-pruned
+    #   queries land near 0, batch members do not wait for the flush end
+    failed_queries: list = dataclasses.field(default_factory=list)
+    # ^ ticket ids terminally failed this flush (typed, not stranded)
+    demote_residue_s: float = 0.0  # demotion wall charged at claim time but
+    #   not carried by any executed split (every split after the claim was
+    #   pruned or re-planned away) — flushed here so the scheduler bridge
+    #   never undercharges
     cache_hits: int = 0            # this flush's block-cache traffic
     cache_misses: int = 0
     result_cache_hits: int = 0     # queries answered without any scan
@@ -168,12 +199,25 @@ def flush_tasks(stats: FlushStats) -> list[Task]:
     build/demotion walls charged like ``mapreduce.job_tasks``, and the batch
     width recorded in ``Task.n_queries`` (totaled by ``run_schedule`` as
     ``ScheduleResult.n_query_answers`` — (query, split) answers, from which
-    callers derive throughput against their distinct-query count)."""
-    return [Task(i, dur, preferred_nodes=(), index_build_s=build,
-                 rekey_s=rekey, n_queries=nq)
-            for i, (dur, build, rekey, nq)
-            in enumerate(zip(stats.split_s, stats.build_s, stats.demote_s,
-                             stats.batch_of_split))]
+    callers derive throughput against their distinct-query count).  Each
+    task also carries the ticket ids live on its split (``Task.query_ids``),
+    so ``run_schedule`` yields per-query completion timestamps — the
+    ServerFrontend's latency signal.  Demotion wall not carried by any
+    executed split (``demote_residue_s``) is charged to the first task, or
+    to a synthetic zero-duration task when the flush executed none."""
+    qids = stats.queries_of_split or [()] * len(stats.split_s)
+    tasks = [Task(i, dur, preferred_nodes=(), index_build_s=build,
+                  rekey_s=rekey, n_queries=nq, query_ids=tuple(qq))
+             for i, (dur, build, rekey, nq, qq)
+             in enumerate(zip(stats.split_s, stats.build_s, stats.demote_s,
+                              stats.batch_of_split, qids))]
+    if stats.demote_residue_s:
+        if tasks:
+            tasks[0].rekey_s += stats.demote_residue_s
+        else:
+            tasks.append(Task(0, 0.0, preferred_nodes=(),
+                              rekey_s=stats.demote_residue_s, n_queries=0))
+    return tasks
 
 
 class HailServer:
@@ -286,6 +330,9 @@ class HailServer:
         stats = FlushStats(n_queries=len(tickets), n_batches=len(batches),
                            n_splits=0,
                            batch_sizes=[len(b) for b in batches])
+        for t in tickets:
+            if t.status == "done":     # result-cache hit: streamed at ~0
+                stats.query_done_s[t.ticket_id] = time.perf_counter() - t0
         cache_h0 = self.cache.stats.hits if self.cache else 0
         cache_m0 = self.cache.stats.misses if self.cache else 0
         # ONE shared adaptive quantum for the whole flush: concurrent
@@ -298,17 +345,45 @@ class HailServer:
         # corruption retry budget is per FLUSH per block — corruption and
         # node-failure retries share it, like run_job's
         retries: collections.Counter = collections.Counter()
-        for batch in batches:
-            self._run_batch(batch, stats, budget, fail, retries)
-        stats.wall_s = time.perf_counter() - t0
-        if fail["node"] is not None:
-            self.store.namenode.revive(fail["node"])
-        # flush boundary: budgeted background scrub + repair of anything
-        # quarantined (by this flush's reads or the scrub itself)
-        if self.config.recovery.scrub and self.store.scrubber is not None:
-            t_s = time.perf_counter()
-            self.store.scrubber.tick()
-            stats.scrub_s = time.perf_counter() - t_s
+        try:
+            for batch in batches:
+                try:
+                    self._run_batch(batch, stats, budget, fail, retries, t0)
+                except UnrecoverableDataError as e:
+                    # the failed batch terminates TYPED — its not-yet-
+                    # finalized tickets get status="failed" (never stranded
+                    # "queued") and the remaining batches still run
+                    for t in batch:
+                        if t.status != "done":
+                            t.status = "failed"
+                            t.error = str(e)
+                            stats.failed_queries.append(t.ticket_id)
+                    # splits dispatched but never barriered leave the
+                    # per-split lists longer than split_s; realign so the
+                    # scheduler bridge's zip cannot silently drop their
+                    # demotion wall (build wall is dropped with the batch —
+                    # the claim-time demotion mutated the store, the builds
+                    # answered nothing)
+                    extra = len(stats.demote_s) - len(stats.split_s)
+                    if extra > 0:
+                        stats.demote_residue_s += sum(stats.demote_s[-extra:])
+                        del stats.demote_s[-extra:]
+                        del stats.build_s[-extra:]
+                        del stats.batch_of_split[-extra:]
+                        del stats.queries_of_split[-extra:]
+        finally:
+            # lifecycle invariants hold even when a batch dies terminally:
+            # the injected-failure node is revived and the boundary scrub
+            # ticks (background verify + repair of anything quarantined by
+            # this flush's reads or the scrub itself)
+            stats.wall_s = time.perf_counter() - t0
+            if fail["node"] is not None:
+                self.store.namenode.revive(fail["node"])
+            if (self.config.recovery.scrub
+                    and self.store.scrubber is not None):
+                t_s = time.perf_counter()
+                self.store.scrubber.tick()
+                stats.scrub_s = time.perf_counter() - t_s
         cluster = self.config.cluster
         overhead = stats.n_splits * cluster.hail_sched_overhead_s
         disk_s = stats.bytes_read / (cluster.disk_bw * cluster.n_nodes)
@@ -361,14 +436,61 @@ class HailServer:
         res = [q.read_hail(self.store, qq, qplan, ids) for qq in queries]
         return res, sum(r.bytes_read for r in res)
 
+    def _live_members(self, qplan: q.QueryPlan, sp: Split,
+                      queries: Sequence[HailQuery]) -> list[int]:
+        """Batch-member indices whose ANSWER can depend on this split.
+
+        A full-scan block touches every row, so it keeps the whole batch
+        live (conservative: no key metadata to prune with).  An index-scan
+        block's good rows span exactly [root-directory min, last good sorted
+        key] — bad records sort to the tail — so a query range that misses
+        that span on every block of the split contributes zero rows and the
+        member need not wait on (or even dispatch) it."""
+        store = self.store
+        if store.layout != "pax" or queries[0].filter is None:
+            return list(range(len(queries)))
+        if any(not qplan.index_scan[b] for b in sp.block_ids):
+            return list(range(len(queries)))
+        col = queries[0].filter_col
+        rows = store.rows_per_block
+        bad = np.asarray(store.bad_counts)
+        live: set[int] = set()
+        for b in sp.block_ids:
+            rep = store.replicas[int(qplan.replica_for_block[b])]
+            n_good = rows - int(bad[b])
+            if n_good <= 0:
+                continue                     # every row bad: nothing to read
+            kmin = int(np.asarray(rep.mins[b, 0]))
+            kmax = int(np.asarray(rep.cols[col][b, n_good - 1]))
+            for qi, qq in enumerate(queries):
+                _, lo, hi = qq.filter
+                if hi >= kmin and lo <= kmax:
+                    live.add(qi)
+            if len(live) == len(queries):
+                break
+        return sorted(live)
+
+    def _empty_col(self, c: str) -> np.ndarray:
+        """Zero-row column in the STORED dtype (a plan can yield zero live
+        splits for a query; the empty answer must still type-check against
+        the schema, not collapse to int32)."""
+        if self.store.layout == "pax":
+            return np.zeros((0,), self.store.replicas[0].cols[c].dtype)
+        if c == ROWID:
+            return np.zeros((0,), np.int32)
+        return np.zeros((0,), self.store.schema.col(c).dtype)
+
     def _run_batch(self, batch: list[Ticket], stats: FlushStats,
                    budget: dict, fail: dict,
-                   retries: collections.Counter):
+                   retries: collections.Counter, t0: float):
         """Execute one shared-scan batch: plan once, dispatch one fused call
         per split, piggyback shared-quantum adaptive builds, handle node
         failure AND read-path corruption by re-planning lost splits
         (per-block retries, bounded by ``config.recovery``) — the same loop
-        shape as ``run_job``, widened to Q queries."""
+        shape as ``run_job``, widened to Q queries.  Completion STREAMS:
+        each ticket finalizes the moment the last split it is live on
+        clears the device barrier (``stats.query_done_s``), instead of at a
+        batch-end barrier."""
 
         def note_retries(block_ids):
             for b in block_ids:
@@ -403,63 +525,82 @@ class HailServer:
                     store.unindexed_blocks(adapt_rid)):
                 adapt_rid = None             # already converged
 
-        dispatched = []                      # (results, shared_bytes, t)
+        dispatched = []               # (results, shared_bytes, t, live qis)
         pending = list(splits)
         i = 0
-        while i < len(pending):
-            if (fail_after is not None and i == fail_after
-                    and fail["node"] is None):
-                pending, qplan, fail["node"], n_retries = \
-                    mr.failover_replan(store, query0, pending, i)
-                stats.rescheduled_tasks += n_retries
-                if n_retries:
-                    note_retries(b for s in pending[-n_retries:]
-                                 for b in s.block_ids)
-                if i >= len(pending):
-                    break
-            sp = pending[i]
-            i += 1
-            try:
-                res, shared = self._read_batch(queries, qplan,
-                                               list(sp.block_ids))
-            except CorruptBlockError as e:
-                # quarantine at the namenode, re-plan against the smaller
-                # replica set, re-queue this split's blocks as per-block
-                # retries — identical recovery shape to run_job's
-                store.quarantine_block(e.replica_id, e.block_id)
-                stats.blocks_quarantined += 1
-                stats.corrupt_retries += 1
-                note_retries(sp.block_ids)
-                qplan = q.plan(store, query0)
-                pending.extend(
-                    Split(node=int(qplan.nodes[b]), block_ids=(b,),
-                          index_scan=bool(qplan.index_scan[b]))
-                    for b in sp.block_ids)
-                continue
-            dispatched.append((res, shared, time.perf_counter()))
-            d_wall, demote_pending = demote_pending, 0.0
-            b_wall = 0.0
-            if adapt_rid is not None and budget["left"] > 0:
-                built, demoted, b_wall, dd_wall = mr.piggyback_build(
-                    store, sp, adapt_rid, adapt_col, budget["left"])
-                budget["left"] -= built
-                stats.blocks_indexed += built
-                stats.blocks_demoted += demoted
-                d_wall += dd_wall
-            stats.build_s.append(b_wall)
-            stats.demote_s.append(d_wall)
-            stats.batch_of_split.append(len(batch))
+        try:
+            while i < len(pending):
+                if (fail_after is not None and i == fail_after
+                        and fail["node"] is None):
+                    pending, qplan, fail["node"], n_retries = \
+                        mr.failover_replan(store, query0, pending, i)
+                    stats.rescheduled_tasks += n_retries
+                    if n_retries:
+                        note_retries(b for s in pending[-n_retries:]
+                                     for b in s.block_ids)
+                    if i >= len(pending):
+                        break
+                sp = pending[i]
+                i += 1
+                live = self._live_members(qplan, sp, queries)
+                if not live:
+                    # DEAD split: no member's answer depends on it, and a
+                    # dead split is all-index-scan so no piggyback build
+                    # rides it — skip the dispatch entirely
+                    continue
+                try:
+                    res, shared = self._read_batch(queries, qplan,
+                                                   list(sp.block_ids))
+                except CorruptBlockError as e:
+                    # quarantine at the namenode, re-plan against the
+                    # smaller replica set, re-queue this split's blocks as
+                    # per-block retries — identical recovery to run_job's
+                    store.quarantine_block(e.replica_id, e.block_id)
+                    stats.blocks_quarantined += 1
+                    stats.corrupt_retries += 1
+                    note_retries(sp.block_ids)
+                    qplan = q.plan(store, query0)
+                    pending.extend(
+                        Split(node=int(qplan.nodes[b]), block_ids=(b,),
+                              index_scan=bool(qplan.index_scan[b]))
+                        for b in sp.block_ids)
+                    continue
+                dispatched.append((res, shared, time.perf_counter(),
+                                   tuple(live)))
+                d_wall, demote_pending = demote_pending, 0.0
+                b_wall = 0.0
+                if adapt_rid is not None and budget["left"] > 0:
+                    built, demoted, b_wall, dd_wall = mr.piggyback_build(
+                        store, sp, adapt_rid, adapt_col, budget["left"])
+                    budget["left"] -= built
+                    stats.blocks_indexed += built
+                    stats.blocks_demoted += demoted
+                    d_wall += dd_wall
+                stats.build_s.append(b_wall)
+                stats.demote_s.append(d_wall)
+                stats.batch_of_split.append(len(batch))
+                stats.queries_of_split.append(
+                    tuple(batch[qi].ticket_id for qi in live))
+        finally:
+            if demote_pending > 0.0:
+                # no split carried the demotion wall the claim paid (every
+                # one was pruned or re-planned away, or the batch died
+                # terminally): it must not vanish from the scheduler
+                # bridge — charge the last executed split, else the flush
+                # residue
+                if stats.demote_s:
+                    stats.demote_s[-1] += demote_pending
+                else:
+                    stats.demote_residue_s += demote_pending
+                demote_pending = 0.0
 
-        # completion: one barrier pass, then per-query assembly
+        # completion: STREAMING — splits were all dispatched asynchronously
+        # above, so blocking them in dispatch order finalizes each ticket
+        # the moment the LAST split it is live on clears the barrier; a
+        # ticket live on early-finishing (or zero) splits completes before
+        # the slowest batch member
         n_splits = len(dispatched)
         stats.n_splits += n_splits
-        per_query = [[] for _ in queries]    # ReadResults per query
-        for res, shared, t_disp in dispatched:
-            jax.block_until_ready(res[0].mask)
-            stats.split_s.append(time.perf_counter() - t_disp)
-            stats.bytes_read += int(shared)
-            for qi, r in enumerate(res):
-                per_query[qi].append(r)
         rc = self.result_cache
         recipe = None
         if (rc is not None and store.layout == "pax"
@@ -474,20 +615,226 @@ class HailServer:
                     q.plan(store, query0), np.arange(store.n_blocks))
             except UnrecoverableDataError:
                 recipe = None          # can't describe a fresh scan: no fill
-        for ticket, parts in zip(batch, per_query):
+
+        per_query: list[list] = [[] for _ in queries]   # live ReadResults
+
+        def finalize(qi: int):
+            ticket, parts = batch[qi], per_query[qi]
             masks = [np.asarray(r.mask).reshape(-1) for r in parts]
             rows: dict[str, np.ndarray] = {}
             for c in tuple(ticket.query.projection) + (q.ROWID,):
                 rows[c] = np.concatenate(
                     [np.asarray(r.cols[c]).reshape(-1)[m]
                      for r, m in zip(parts, masks)]) if parts else \
-                    np.zeros((0,), np.int32)
+                    self._empty_col(c)
             n_rows = int(sum(m.sum() for m in masks))
             ticket.result = QueryResult(n_rows=n_rows, rows=rows,
                                         batch_size=len(batch),
                                         n_splits=n_splits)
             ticket.status = "done"
+            stats.query_done_s[ticket.ticket_id] = time.perf_counter() - t0
             if recipe is not None:
                 col, lo, hi = ticket.query.filter
                 rc.put(col, lo, hi, tuple(ticket.query.projection),
                        store.version, rows, recipe)
+
+        remaining = [0] * len(queries)     # live splits still outstanding
+        for _, _, _, live in dispatched:
+            for qi in live:
+                remaining[qi] += 1
+        for qi in range(len(queries)):
+            if remaining[qi] == 0:
+                finalize(qi)               # live on nothing: done at once
+        for res, shared, t_disp, live in dispatched:
+            jax.block_until_ready(res[0].mask)
+            stats.split_s.append(time.perf_counter() - t_disp)
+            stats.bytes_read += int(shared)
+            for qi in live:
+                per_query[qi].append(res[qi])
+                remaining[qi] -= 1
+                if remaining[qi] == 0:
+                    finalize(qi)
+
+
+# ---------------------------------------------------------------------------
+# Async latency-SLO frontend (simulated-clock event loop over HailServer)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FlushPolicy:
+    """Auto-flush + fairness knobs for the ``ServerFrontend`` event loop.
+
+    ``window_s`` is the latency-SLO knob: a flush cycle fires once the
+    OLDEST pending query has waited this long (``float('inf')`` never
+    auto-fires — the single-big-flush baseline, drained only by ``drain``).
+    An infinite window disables the batch-full trigger too — the baseline
+    is ONE big flush, not an accumulation that self-fires.
+    ``max_batches_per_flush`` is one cycle's capacity; when more batches are
+    pending, weighted-fair admission decides which dispatch first and the
+    rest carry to the next cycle (None = no cap).  ``weights`` are per-
+    tenant WFQ weights (default 1.0): under sustained overload a tenant
+    with weight w receives ~w times the batch slots of a weight-1 tenant.
+    """
+    window_s: float = 0.05
+    max_batches_per_flush: Optional[int] = None
+    weights: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class _Arrival:
+    """One offered query waiting in the frontend's admission queue."""
+    seq: int
+    query: HailQuery
+    tenant: str
+    arrival_s: float
+
+
+class ServerFrontend:
+    """Async serving loop with latency SLOs on top of a ``HailServer``.
+
+    Callers ``offer`` queries stamped with SIMULATED arrival times; the
+    event loop fires a flush cycle when the ``FlushPolicy`` says so — the
+    oldest pending query is ``window_s`` old, or a compatible batch fills
+    to ``max_batch`` — rather than a caller choosing when to ``flush``.
+    Each cycle WFQ-admits up to ``max_batches_per_flush`` batches (per-
+    tenant virtual time; leftovers carry), submits them through the
+    server's admission control (over-quota members stay queued for the
+    next cycle), flushes, and bridges the flush into the event-driven
+    cluster simulator: per-query latency is
+
+        max(trigger time, cluster busy-until) + that query's completion
+        offset in the modeled schedule  -  its arrival time
+
+    where the completion offset comes from ``run_schedule``'s
+    ``query_completion_s`` (a query streams back when the LAST split it is
+    live on finishes — result-cache hits and fully-pruned queries complete
+    at offset 0).  The modeled cluster is busy until the schedule's
+    makespan elapses, so back-to-back cycles queue behind each other —
+    offered load beyond the service rate shows up as queueing latency,
+    which is exactly the p50/p99-vs-load curve ``bench_server`` sweeps.
+    """
+
+    def __init__(self, server: HailServer,
+                 policy: Optional[FlushPolicy] = None):
+        self.server = server
+        self.policy = policy or FlushPolicy()
+        self.now = 0.0
+        self.busy_until = 0.0          # sim time the modeled cluster frees
+        self._queue: list[_Arrival] = []
+        self._seq = 0
+        self._vtime: dict[str, float] = collections.defaultdict(float)
+        self.latencies: dict[int, float] = {}    # ticket id -> sim seconds
+        self.completed: dict[int, Ticket] = {}
+        self.failed: list[Ticket] = []
+        self.flushes: list[FlushStats] = []
+
+    # -- event loop ---------------------------------------------------------
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
+
+    def offer(self, query: HailQuery, tenant: str = "default",
+              at: Optional[float] = None) -> None:
+        """Enqueue one query arriving at simulated time ``at`` (default:
+        now).  Window deadlines that elapse before the arrival fire first
+        (in arrival-time order), then the batch-full trigger."""
+        at = self.now if at is None else float(at)
+        self._advance(at)
+        self._queue.append(_Arrival(self._seq, query, tenant, self.now))
+        self._seq += 1
+        if (np.isfinite(self.policy.window_s)
+                and self._full_batch_pending()):
+            self._flush_cycle(self.now)
+
+    def drain(self) -> "ServerFrontend":
+        """Flush until the queue empties (the end-of-workload drain; also
+        the ONLY trigger under the ``window_s=inf`` baseline policy)."""
+        while self._queue:
+            if not self._flush_cycle(max(self.now, self.busy_until)):
+                break                  # nothing admissible: avoid spinning
+        return self
+
+    def percentile_latency(self, p: float) -> float:
+        return float(np.percentile(list(self.latencies.values()), p))
+
+    def _advance(self, to: float) -> None:
+        """Fire every window deadline that falls at or before ``to``."""
+        w = self.policy.window_s
+        while self._queue:
+            deadline = min(p.arrival_s for p in self._queue) + w
+            if deadline > to:
+                break
+            if not self._flush_cycle(deadline):
+                break                  # nothing admissible: avoid spinning
+        self.now = max(self.now, to)
+
+    # -- flush cycle --------------------------------------------------------
+
+    def _batch_key(self, p: _Arrival):
+        # mirrors HailServer._batches: same (filter col, projection) means
+        # one shared scan; filterless queries cannot share
+        if p.query.filter is None or self.server.store.layout != "pax":
+            return ("__single__", p.seq)
+        return (p.query.filter_col, tuple(p.query.projection))
+
+    def _full_batch_pending(self) -> bool:
+        counts: collections.Counter = collections.Counter(
+            self._batch_key(p) for p in self._queue)
+        return any(n >= self.server.config.max_batch
+                   for key, n in counts.items() if key[0] != "__single__")
+
+    def _flush_cycle(self, trigger_s: float) -> bool:
+        """One cycle: WFQ-order the pending batches, admit up to the
+        policy's capacity through the server, flush, and stream modeled
+        per-query completion times into ``latencies``.  Returns whether any
+        query was admitted (False = no progress possible right now)."""
+        groups: dict = {}
+        for p in self._queue:
+            groups.setdefault(self._batch_key(p), []).append(p)
+        maxb = self.server.config.max_batch
+        batches = [members[i:i + maxb] for members in groups.values()
+                   for i in range(0, len(members), maxb)]
+        # WFQ: a batch's priority is its best member's tenant virtual time
+        # (ties: earliest arrival) — dispatching advances each member
+        # tenant's vtime by 1/weight, so heavy-weight tenants drain faster
+        batches.sort(key=lambda b: (min(self._vtime[p.tenant] for p in b),
+                                    min(p.arrival_s for p in b),
+                                    min(p.seq for p in b)))
+        cap = self.policy.max_batches_per_flush
+        if cap is not None:
+            batches = batches[:cap]
+        admitted: list[tuple[_Arrival, Ticket]] = []
+        taken: set[int] = set()
+        for b in batches:
+            for p in b:
+                try:
+                    tk = self.server.submit(p.query, tenant=p.tenant)
+                except AdmissionError:
+                    continue           # over quota: retained for next cycle
+                admitted.append((p, tk))
+                taken.add(p.seq)
+                self._vtime[p.tenant] += (
+                    1.0 / self.policy.weights.get(p.tenant, 1.0))
+        if not admitted:
+            return False
+        self._queue = [p for p in self._queue if p.seq not in taken]
+        start = max(trigger_s, self.busy_until)
+        stats = self.server.flush()
+        self.flushes.append(stats)
+        cm = self.server.config.cluster
+        sched = run_schedule(
+            flush_tasks(stats),
+            SimulatedCluster(n_nodes=cm.n_nodes, map_slots=cm.map_slots),
+            spec_factor=None)
+        for p, tk in admitted:
+            self.completed[tk.ticket_id] = tk
+            if tk.status == "failed":
+                self.failed.append(tk)
+                continue
+            done = start + sched.query_completion_s.get(tk.ticket_id, 0.0)
+            self.latencies[tk.ticket_id] = done - p.arrival_s
+        self.busy_until = start + sched.makespan_s
+        self.now = max(self.now, trigger_s)
+        return True

@@ -36,6 +36,11 @@ class Task:
     #   ScheduleResult.n_query_answers totals these (query, split) answers
     #   across the schedule (distinct-query throughput is the caller's to
     #   compute: bench_server divides Q by the makespan)
+    query_ids: tuple[int, ...] = ()     # the distinct queries whose answers
+    #   DEPEND on this task (a shared-scan split carries the batch members
+    #   it is live for) — run_schedule folds these into per-query
+    #   completion timestamps (ScheduleResult.query_completion_s), the
+    #   latency signal the ServerFrontend's SLO accounting consumes
 
 
 @dataclasses.dataclass
@@ -58,6 +63,11 @@ class ScheduleResult:
     #   tasks produced — NOT distinct queries (a Q-wide batch over S splits
     #   counts Q*S), so dividing by makespan gives answer throughput; for
     #   query throughput divide the caller's distinct-query count instead
+    query_completion_s: dict = dataclasses.field(default_factory=dict)
+    #   query id -> simulated time its LAST carrying task finished (a query
+    #   streams back the moment every split it depends on has completed,
+    #   not at the schedule's end) — queries carried by no task (e.g.
+    #   result-cache hits, fully pruned ranges) complete at time 0
 
 
 def run_schedule(tasks: list[Task], cluster: SimulatedCluster,
@@ -147,8 +157,13 @@ def run_schedule(tasks: list[Task], cluster: SimulatedCluster,
                         n_spec += 1
 
     makespan = max((r.end_s for r in done.values()), default=0.0)
+    completion: dict = {}
+    for run in done.values():
+        for qid in task_by_id[run.task_id].query_ids:
+            completion[qid] = max(completion.get(qid, 0.0), run.end_s)
     return ScheduleResult(
         makespan_s=makespan, runs=list(done.values()), n_speculative=n_spec,
         n_failovers=n_failover,
         locality_fraction=local_hits / max(assignments, 1),
-        n_query_answers=sum(t.n_queries for t in tasks))
+        n_query_answers=sum(t.n_queries for t in tasks),
+        query_completion_s=completion)

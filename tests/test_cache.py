@@ -295,3 +295,22 @@ def test_result_cache_oversized_entry_not_admitted():
 
 if __name__ == "__main__":
     pytest.main([__file__, "-q"])
+
+
+def test_result_cache_entries_are_mutation_proof():
+    """Fill freezes the stored arrays (which ALIAS the caller's), so a
+    caller scribbling on a served answer — or on the rows it just cached —
+    raises instead of silently corrupting every future hit for that key."""
+    rc = ResultCache()
+    mine = _rows([1, 5, 9], [10, 11, 12])
+    rc.put("c", 0, 10, ("c",), 0, mine, ())
+    with pytest.raises(ValueError):
+        mine["c"][0] = -1                     # the fill's own input froze
+    hit = rc.lookup("c", 0, 10, ("c",), 0)
+    with pytest.raises(ValueError):
+        hit.rows["c"][:] = 0
+    sub = rc.lookup("c", 2, 6, ("c",), 0)     # narrowed copies freeze too
+    with pytest.raises(ValueError):
+        sub.rows["__rowid__"][0] = 0
+    np.testing.assert_array_equal(
+        rc.lookup("c", 0, 10, ("c",), 0).rows["c"], [1, 5, 9])

@@ -51,3 +51,15 @@ def test_makespan_scales_with_slots():
     b = run_schedule(tasks, SimulatedCluster(n_nodes=4, map_slots=4, seed=0),
                      spec_factor=None)
     assert b.makespan_s < a.makespan_s / 2
+
+
+def test_per_query_completion_timestamps():
+    """A query completes when the LAST task carrying it ends — not at the
+    schedule's makespan; queries carried by no task are simply absent."""
+    cluster = SimulatedCluster(n_nodes=2, map_slots=2)
+    tasks = [Task(0, 1.0, preferred_nodes=(), query_ids=(10, 11)),
+             Task(1, 2.0, preferred_nodes=(), query_ids=(11,)),
+             Task(2, 3.0, preferred_nodes=())]
+    res = run_schedule(tasks, cluster, spec_factor=None)
+    assert res.query_completion_s == {10: 1.0, 11: 2.0}
+    assert res.makespan_s == 3.0

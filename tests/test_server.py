@@ -403,11 +403,12 @@ def test_result_cache_counters_innermost_stats_scope(served_store):
     assert inner.dispatches["result_cache_misses"] == 0
     assert outer_hits_before_exit == 1       # merged up when inner exited
     assert outer.dispatches["result_cache_hits"] == 1
-    # block-cache counters obey the same innermost-scope rule: QUERIES[1]
+    # block-cache counters obey the same innermost-scope rule: QUERIES[4]
     # misses the result tier (new range, filter col not projected so no
     # subsumption) but HITS the block cache (same col+proj gather key as
-    # the QUERIES[0] fill)
-    server.submit(QUERIES[1])
+    # the QUERIES[0] fill).  A LIVE range is required here — a dead one
+    # like QUERIES[1] now prunes every split and issues zero gathers.
+    server.submit(QUERIES[4])
     with ops.stats_scope() as outer2:
         with ops.stats_scope() as inner2:
             server.flush()
@@ -616,3 +617,271 @@ def test_server_matches_uncached_oracle_under_races(seed, offer_rate, n_q):
     # destructive transitions, which is exactly the point of the test
     assert (server.result_cache.stats.hits
             + server.result_cache.stats.misses) > 0
+
+
+# ---------------------------------------------------------------------------
+# Streaming completion, flush lifecycle fixes, and the async frontend (PR 8)
+# ---------------------------------------------------------------------------
+
+import jax.numpy as jnp
+
+from repro.core.fault import FaultInjector
+from repro.runtime.scheduler import Task
+from repro.runtime.scrubber import Scrubber
+
+# ranges DEAD against visitDate's [7000, 12000) domain vs provably live ones
+DEAD_IDX = [i for i, (lo, hi) in enumerate(RANGES) if hi < 7000]
+WIDE_IDX = RANGES.index((0, 1 << 30))
+
+
+def test_streaming_per_query_completion(served_store):
+    """A batch member live on no split (dead range) finalizes BEFORE any
+    member that must wait on a scan barrier, each ticket's live-split set
+    rides in ``queries_of_split``, and every row-set still matches the
+    serial oracle."""
+    server = js.HailServer(served_store,
+                           js.ServerConfig(max_batch=8, result_cache=False))
+    tickets = [server.submit(qq) for qq in QUERIES]
+    fl = server.flush()
+    for t in tickets:
+        _assert_ticket_matches(t, _oracle_rows(served_store, t.query))
+    # every ticket streamed a completion timestamp
+    assert set(fl.query_done_s) == {t.ticket_id for t in tickets}
+    # the live map is aligned with the executed splits and is exact at the
+    # extremes: dead ranges ride no split, the full-domain range rides all
+    assert len(fl.queries_of_split) == fl.n_splits == len(fl.split_s)
+    dead_ids = {tickets[i].ticket_id for i in DEAD_IDX}
+    wide_id = tickets[WIDE_IDX].ticket_id
+    for live in fl.queries_of_split:
+        assert wide_id in live
+        assert not dead_ids & set(live)
+    # dead-range members finalized before any scan-bound member
+    dead_done = max(fl.query_done_s[i] for i in dead_ids)
+    live_done = min(v for k, v in fl.query_done_s.items()
+                    if k not in dead_ids)
+    assert dead_done <= live_done
+    # the scheduler bridge carries the same dependency sets
+    tasks = js.flush_tasks(fl)
+    sched = run_schedule(tasks, SimulatedCluster(n_nodes=4), None)
+    assert set().union(*fl.queries_of_split) == set(
+        sched.query_completion_s)
+    assert all(i not in sched.query_completion_s for i in dead_ids)
+
+
+def test_dead_range_batch_prunes_every_split(served_store):
+    """A batch whose members all miss every block's key range dispatches
+    ZERO fused reads — and the empty answers carry the STORED dtypes, not
+    a hardcoded int32 (regression: the empty-assembly fallback)."""
+    for rep in served_store.replicas:
+        rep.cols["adRevenue"] = rep.cols["adRevenue"].astype(jnp.float32)
+    server = js.HailServer(served_store, js.ServerConfig(max_batch=8))
+    t1 = server.submit(q.HailQuery(filter=("visitDate", 7, 7),
+                                   projection=("adRevenue",)))
+    t2 = server.submit(q.HailQuery(filter=("visitDate", 0, 100),
+                                   projection=("adRevenue",)))
+    with ops.stats_scope() as s:
+        fl = server.flush()
+    assert s.dispatches["hail_read"] == 0 and fl.n_splits == 0
+    for t in (t1, t2):
+        assert t.status == "done" and t.result.n_rows == 0
+        assert t.result.rows["adRevenue"].dtype == np.float32
+        assert t.result.rows[ROWID].dtype == np.int32
+        assert len(t.result.rows["adRevenue"]) == 0
+
+
+def test_unrecoverable_batch_fails_typed_not_stranded(served_store):
+    """Mid-flush ``UnrecoverableDataError``: the failed batch's tickets get
+    a TYPED terminal status (never stranded "queued"), result-cache-served
+    tickets of the same flush still complete, the injected-failure node is
+    revived, and the boundary scrub still ticks (regression: flush() used
+    to propagate and strand everything)."""
+    scrub = Scrubber(served_store).attach()
+    # no block cache: a warm hit would serve the pre-corruption decode and
+    # mask the fault (hits legitimately skip re-verification)
+    server = js.HailServer(served_store,
+                           js.ServerConfig(max_batch=8, cache=False))
+    warm = server.submit(QUERIES[0])
+    server.flush()                               # clean fill of the result tier
+    assert warm.status == "done"
+    ticks0 = scrub.stats.ticks
+
+    # silent corruption of EVERY replica of one block: any scan that plans
+    # across it is unrecoverable by construction
+    FaultInjector(served_store, seed=3).corrupt_replicas(
+        2, served_store.replication, "visitDate")
+    hit = server.submit(QUERIES[0])              # result tier: no scan needed
+    doomed = server.submit(QUERIES[WIDE_IDX])
+    fl = server.flush(fail_node_at=0.0)
+
+    assert hit.status == "done" and hit.result.from_cache
+    assert doomed.status == "failed" and doomed.result is None
+    assert "block" in doomed.error
+    assert fl.failed_queries == [doomed.ticket_id]
+    assert not any(t.status == "queued" for t in server.tickets)
+    assert not served_store.namenode.dead        # revived in the finally
+    assert scrub.stats.ticks == ticks0 + 1       # boundary scrub still ran
+    assert fl.scrub_s > 0.0
+
+
+def test_result_cache_hit_is_mutation_proof(served_store):
+    """A caller scribbling on a served answer RAISES instead of silently
+    corrupting every future hit for that key (regression: hits aliased
+    cache-owned arrays through a shallow dict copy)."""
+    server = js.HailServer(served_store, js.ServerConfig(max_batch=8))
+    server.submit(QUERIES[0])
+    server.flush()                               # fill
+    t_hit = server.submit(QUERIES[0])
+    server.flush()
+    assert t_hit.result.from_cache and t_hit.result.n_rows > 0
+    with pytest.raises(ValueError):
+        t_hit.result.rows["sourceIP"][:] = -1
+    with pytest.raises(ValueError):
+        t_hit.result.rows[ROWID][0] = 0
+    # and the key keeps serving the exact answer
+    t2 = server.submit(QUERIES[0])
+    server.flush()
+    assert t2.result.from_cache
+    _assert_ticket_matches(t2, _oracle_rows(served_store, QUERIES[0]))
+
+
+def test_flush_tasks_charges_demote_residue():
+    """Demotion wall carried by no executed split must still reach the
+    scheduler bridge: charged onto the first task, or onto a synthetic
+    zero-duration task when the flush executed none."""
+    fl = js.FlushStats(n_queries=1, n_batches=1, n_splits=0, batch_sizes=[1])
+    fl.demote_residue_s = 0.25
+    tasks = js.flush_tasks(fl)
+    assert len(tasks) == 1
+    assert tasks[0].duration_s == 0.0 and tasks[0].rekey_s == 0.25
+    assert run_schedule(tasks, SimulatedCluster(n_nodes=2), None
+                        ).makespan_s == pytest.approx(0.25)
+
+    fl2 = js.FlushStats(n_queries=2, n_batches=1, n_splits=2,
+                        batch_sizes=[2])
+    fl2.split_s, fl2.build_s = [0.5, 0.5], [0.0, 0.0]
+    fl2.demote_s, fl2.batch_of_split = [0.0, 0.1], [2, 2]
+    fl2.queries_of_split = [(0, 1), (1,)]
+    fl2.demote_residue_s = 0.25
+    tasks2 = js.flush_tasks(fl2)
+    assert len(tasks2) == fl2.n_splits           # no synthetic task
+    assert tasks2[0].rekey_s == pytest.approx(0.25)
+    assert tasks2[0].query_ids == (0, 1) and tasks2[1].query_ids == (1,)
+
+
+def test_demote_wall_survives_pruned_and_terminal_batches(
+        served_store, monkeypatch):
+    """The demotion wall paid at claim time never vanishes, whether every
+    split after the claim is dead-pruned or the batch dies terminally
+    (regression: it was only charged when a dispatch succeeded)."""
+    monkeypatch.setattr(js.mr, "claim_adaptive_replica",
+                        lambda store, col, quantum: (None, 1, 0.5))
+    cfg = js.ServerConfig(max_batch=8, result_cache=False,
+                          adaptive=mr.AdaptiveConfig(offer_rate=1.0))
+    # every split dead-pruned: the wall lands in the flush residue
+    server = js.HailServer(served_store, cfg)
+    server.submit(q.HailQuery(filter=("visitDate", 7, 7),
+                              projection=("sourceIP",)))
+    fl = server.flush()
+    assert fl.n_splits == 0
+    assert fl.demote_residue_s == pytest.approx(0.5)
+    assert sum(t.rekey_s for t in js.flush_tasks(fl)) == pytest.approx(0.5)
+
+    # batch dies terminally: the wall still reaches the bridge
+    FaultInjector(served_store, seed=5).corrupt_replicas(
+        1, served_store.replication, "visitDate")
+    doomed = server.submit(QUERIES[WIDE_IDX])
+    fl2 = server.flush()
+    assert doomed.status == "failed"
+    assert (sum(fl2.demote_s) + fl2.demote_residue_s
+            == pytest.approx(0.5))
+    assert (sum(t.rekey_s for t in js.flush_tasks(fl2))
+            == pytest.approx(0.5))
+
+
+# ---------------------------------------------------------------------------
+# ServerFrontend: auto-flush, streaming latency, weighted-fair admission
+# ---------------------------------------------------------------------------
+
+
+def test_frontend_window_trigger_and_drain(served_store):
+    """The oldest-pending window fires the flush (not the caller), later
+    arrivals queue for the next cycle, and every answer matches the serial
+    oracle with a per-query latency."""
+    server = js.HailServer(served_store,
+                           js.ServerConfig(result_cache=False))
+    fe = js.ServerFrontend(server, js.FlushPolicy(window_s=1.0))
+    for i, dt in [(0, 0.0), (2, 0.1), (4, 0.2)]:
+        fe.offer(QUERIES[i], at=dt)
+    assert fe.flushes == [] and fe.queue_depth == 3   # window not elapsed
+    fe.offer(QUERIES[5], at=5.0)      # deadline 0.0+1.0 fires on the way
+    assert len(fe.flushes) == 1 and fe.flushes[0].n_queries == 3
+    assert fe.queue_depth == 1
+    fe.drain()
+    assert fe.queue_depth == 0 and len(fe.flushes) == 2
+    assert len(fe.latencies) == 4 and not fe.failed
+    for tk in fe.completed.values():
+        _assert_ticket_matches(tk, _oracle_rows(served_store, tk.query))
+    # the first arrival waited the full window before its flush even began
+    first = server.tickets[0]
+    assert fe.latencies[first.ticket_id] >= 1.0
+    assert all(v >= 0.0 for v in fe.latencies.values())
+
+
+def test_frontend_batch_full_trigger(served_store):
+    """A compatible batch filling to max_batch fires immediately — no
+    window wait — while the infinite-window baseline never self-fires."""
+    server = js.HailServer(served_store,
+                           js.ServerConfig(max_batch=2,
+                                           result_cache=False))
+    fe = js.ServerFrontend(server, js.FlushPolicy(window_s=100.0))
+    fe.offer(QUERIES[0], at=0.0)
+    assert fe.flushes == []
+    fe.offer(QUERIES[2], at=0.0)      # same (col, projection): batch full
+    assert len(fe.flushes) == 1 and fe.queue_depth == 0
+    assert fe.flushes[0].n_queries == 2
+
+    baseline = js.ServerFrontend(
+        js.HailServer(served_store,
+                      js.ServerConfig(max_batch=2, result_cache=False)),
+        js.FlushPolicy(window_s=float("inf")))
+    for i in range(4):
+        baseline.offer(QUERIES[i], at=0.0)
+    assert baseline.flushes == []     # inf window: drain-driven only
+    baseline.drain()
+    assert len(baseline.flushes) == 1
+    assert baseline.flushes[0].n_queries == 4
+
+
+def test_frontend_weighted_fair_admission(served_store):
+    """Under overload (one batch per cycle), per-tenant WFQ weights decide
+    the drain order: a weight-4 tenant gets ~4 of every 5 batch slots."""
+    server = js.HailServer(served_store,
+                           js.ServerConfig(max_batch=2, max_pending_total=64,
+                                           result_cache=False))
+    fe = js.ServerFrontend(server, js.FlushPolicy(
+        window_s=float("inf"), max_batches_per_flush=1,
+        weights={"A": 4.0, "B": 1.0}))
+    qa = q.HailQuery(filter=("visitDate", 7000, 9000),
+                     projection=("sourceIP",))
+    qb = q.HailQuery(filter=("visitDate", 7000, 9000),
+                     projection=("adRevenue",))   # distinct group per tenant
+    for _ in range(3):
+        fe.offer(qa, tenant="A", at=0.0)
+        fe.offer(qb, tenant="B", at=0.0)
+        fe.offer(qa, tenant="A", at=0.0)
+        fe.offer(qb, tenant="B", at=0.0)
+    assert fe.flushes == []           # inf window: nothing self-fires
+    fe.drain()
+    assert len(fe.flushes) == 6       # 6 batches of 2, one per cycle
+    # reconstruct the per-cycle tenant from the server's submission order
+    order, pos = [], 0
+    for fl in fe.flushes:
+        order.append(server.tickets[pos].tenant)
+        pos += fl.n_queries
+    # A/B vtimes: A's 2-query batch costs 2/4=0.5, B's costs 2/1=2.0, so
+    # A drains its 3 batches in cycles 1/3/4 and B trails with 2 at the end
+    assert order == ["A", "B", "A", "A", "B", "B"]
+    # every answer is still exact, and later cycles queued behind earlier
+    for tk in fe.completed.values():
+        _assert_ticket_matches(tk, _oracle_rows(served_store, tk.query))
+    assert fe.percentile_latency(99) >= fe.percentile_latency(50)
