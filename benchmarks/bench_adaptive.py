@@ -18,7 +18,8 @@ import json
 import math
 import os
 
-from benchmarks.common import timed, uservisits_raw
+from benchmarks.common import obs_snapshot, obs_sum, timed, uservisits_raw
+from repro.obs import metrics as obs_metrics
 from repro.core import mapreduce as mr
 from repro.core import schema as sc
 from repro.core import upload as up
@@ -102,7 +103,16 @@ def convergence(blocks: int = 24, rows: int = 2048,
 
 def run(quick: bool = False):
     blocks, rows = (12, 1024) if quick else (24, 2048)
+    reg0 = obs_snapshot()
     d = convergence(blocks=blocks, rows=rows)
+    # the registry's view of the same run — the convergence loop's
+    # hand-collected per-job lists must agree with the job.* counters
+    reg = obs_metrics.delta(reg0)
+    d["obs_adaptive_blocks_indexed"] = int(obs_sum(reg, "job.blocks_indexed"))
+    d["obs_adaptive_jobs"] = int(obs_sum(reg, "job.jobs"))
+    d["obs_adaptive_counters_agree"] = (
+        d["obs_adaptive_blocks_indexed"]
+        == sum(d["adaptive_blocks_indexed"]))
 
     blob = {}
     if os.path.exists(JSON_PATH):

@@ -26,8 +26,9 @@ import os
 
 import numpy as np
 
-from benchmarks.common import uservisits_raw
+from benchmarks.common import obs_snapshot, obs_sum, uservisits_raw
 from repro.core import mapreduce as mr
+from repro.obs import metrics as obs_metrics
 from repro.core import schema as sc
 from repro.core import upload as up
 from repro.core.fault import FaultInjector, UnrecoverableDataError
@@ -137,7 +138,19 @@ def corruption_resilience(blocks: int = 24, rows: int = 2048) -> dict:
 
 def run(quick: bool = False):
     blocks, rows = (12, 1024) if quick else (24, 2048)
+    reg0 = obs_snapshot()
     d = corruption_resilience(blocks=blocks, rows=rows)
+    # registry view of the same section: the quarantine counter crosses
+    # flush AND job paths, so it must cover at least the detection job's
+    reg = obs_metrics.delta(reg0)
+    d["obs_fault_blocks_quarantined"] = int(
+        obs_sum(reg, "job.blocks_quarantined")
+        + obs_sum(reg, "flush.blocks_quarantined"))
+    d["obs_fault_corrupt_retries"] = int(
+        obs_sum(reg, "job.corrupt_retries")
+        + obs_sum(reg, "flush.corrupt_retries"))
+    d["obs_fault_counters_agree"] = (
+        d["obs_fault_blocks_quarantined"] >= d["fault_blocks_quarantined"])
 
     blob = {}
     if os.path.exists(JSON_PATH):

@@ -19,8 +19,9 @@ import json
 import math
 import os
 
-from benchmarks.common import uservisits_raw
+from benchmarks.common import obs_snapshot, obs_sum, uservisits_raw
 from repro.core import governor as gv
+from repro.obs import metrics as obs_metrics
 from repro.core import mapreduce as mr
 from repro.core import schema as sc
 from repro.core import upload as up
@@ -106,7 +107,17 @@ def workload_shift(blocks: int = 24, rows: int = 2048,
 
 def run(quick: bool = False):
     blocks, rows = (12, 1024) if quick else (24, 2048)
+    reg0 = obs_snapshot()
     d = workload_shift(blocks=blocks, rows=rows)
+    # registry view of the same shift: per-(replica, column) demotion
+    # counters must total the governor's own event log
+    reg = obs_metrics.delta(reg0)
+    d["obs_governor_demoted_blocks"] = int(
+        obs_sum(reg, "governor.demoted_blocks"))
+    d["obs_governor_demotion_events"] = int(
+        obs_sum(reg, "governor.demotion_events"))
+    d["obs_governor_counters_agree"] = (
+        d["obs_governor_demoted_blocks"] == d["governor_demotions_total"])
 
     blob = {}
     if os.path.exists(JSON_PATH):

@@ -17,6 +17,7 @@ from repro.core import mapreduce as mr
 from repro.core import schema as sc
 from repro.core import upload as up
 from repro.core.parse import format_rows
+from repro.obs import metrics as obs_metrics
 
 ROWS = 4096
 BLOCKS = 40
@@ -69,6 +70,21 @@ def hadooppp_store_uv():
         _cache["hpp_uv"] = up.hadooppp_upload(sc.USERVISITS, raw, "sourceIP",
                                               n_nodes=NODES)
     return _cache["hpp_uv"]
+
+
+def obs_snapshot() -> dict:
+    """Registry snapshot for a bench section (collectors included)."""
+    return obs_metrics.snapshot()
+
+
+def obs_sum(delta: dict, name: str) -> float:
+    """Sum a registry delta over every label set of one series name —
+    ``obs_sum(d, "job.blocks_indexed")`` matches the bare series and every
+    ``job.blocks_indexed{...}`` variant.  This (snapshot -> delta ->
+    obs_sum) is the idiom that replaces the hand-rolled before/after
+    field diffs the bench drivers used to carry."""
+    return sum(v for k, v in delta.items()
+               if k == name or k.startswith(name + "{"))
 
 
 def timed(fn, *args, warmup: int = 1, reps: int = 3, **kw):

@@ -294,6 +294,15 @@ class IndexGovernor:
                       blocks_dropped: int):
         self.events.append(DemotionEvent(replica_id, sort_key,
                                          blocks_dropped))
+        from repro.obs import metrics as obs_metrics
+        from repro.obs import trace as obs_trace
+        obs_metrics.REGISTRY.inc("governor.demotion_events", 1,
+                                 replica=replica_id, column=sort_key)
+        obs_metrics.REGISTRY.inc("governor.demoted_blocks", blocks_dropped,
+                                 replica=replica_id, column=sort_key)
+        obs_trace.instant("demotion", track="governor",
+                          args={"replica": replica_id, "column": sort_key,
+                                "blocks": blocks_dropped})
 
     @property
     def blocks_demoted_total(self) -> int:

@@ -47,6 +47,8 @@ from repro.core.fault import (CorruptBlockError, RecoveryConfig,
                               UnrecoverableDataError)
 from repro.core.splitting import Split, hadoop_splits, hail_splits
 from repro.core.store import BlockStore
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 @dataclasses.dataclass
@@ -172,6 +174,10 @@ def claim_adaptive_replica(store: BlockStore, adapt_col: str,
             t_d = time.perf_counter()
             demoted = store.demote_replica(victim)
             d_wall = time.perf_counter() - t_d
+            obs_trace.complete_wall("demote", t_d, d_wall, track="adaptive",
+                                    args={"replica": victim,
+                                          "blocks": demoted,
+                                          "reclaim_for": adapt_col})
             adapt_rid = store.adaptive_replica_for(adapt_col)
     return adapt_rid, demoted, d_wall
 
@@ -207,6 +213,11 @@ def piggyback_build(store: BlockStore, sp: "Split", adapt_rid: int,
             t_d = time.perf_counter()
             demoted += store.demote_replica(victim)
             d_wall += time.perf_counter() - t_d
+            obs_trace.complete_wall("demote", t_d,
+                                    time.perf_counter() - t_d,
+                                    track="adaptive",
+                                    args={"replica": victim,
+                                          "reason": "budget"})
             room = governor.room(store)
     built = 0
     if offer:
@@ -214,6 +225,10 @@ def piggyback_build(store: BlockStore, sp: "Split", adapt_rid: int,
         built = _build_block_indexes(store, adapt_rid, offer, adapt_col,
                                      partition_size=store.partition_size)
         b_wall = time.perf_counter() - t_b
+        obs_trace.complete_wall("adaptive_build", t_b, b_wall,
+                                track="adaptive",
+                                args={"replica": adapt_rid,
+                                      "column": adapt_col, "blocks": built})
     return built, demoted, b_wall, d_wall
 
 
@@ -321,7 +336,8 @@ def run_job(store: BlockStore, query: q.HailQuery, *,
     from repro.core import governor as gvn
 
     gvn.note_job_start(store)   # job boundary for the hysteresis counter
-    qplan = q.plan(store, query)
+    with obs_trace.span("job_plan", track="job"):
+        qplan = q.plan(store, query)
     if store.layout != "pax":
         splits = hadoop_splits(store, qplan)
     elif splitting == "hail":
@@ -406,6 +422,9 @@ def run_job(store: BlockStore, query: q.HailQuery, *,
             store.quarantine_block(e.replica_id, e.block_id)
             blocks_quarantined += 1
             corrupt_retries += 1
+            obs_trace.instant("corrupt_retry", track="job",
+                              args={"replica": e.replica_id,
+                                    "block": e.block_id})
             note_retries(sp.block_ids)
             qplan = q.plan(store, query)
             pending.extend(
@@ -437,6 +456,8 @@ def run_job(store: BlockStore, query: q.HailQuery, *,
     for k, (res, t_disp) in enumerate(dispatched):
         jax.block_until_ready(res.mask)
         split_s.append(time.perf_counter() - t_disp)
+        obs_trace.complete_wall("split", t_disp, split_s[-1], track="job",
+                                args={"split": k})
         bytes_read += int(res.bytes_read)   # lazy scalar -> host, post-barrier
         masks.append(np.asarray(res.mask))
         cols.append({c: np.asarray(v) for c, v in res.cols.items()})
@@ -458,6 +479,7 @@ def run_job(store: BlockStore, query: q.HailQuery, *,
         t_s = time.perf_counter()
         store.scrubber.tick()
         scrub_s = time.perf_counter() - t_s
+        obs_trace.complete_wall("scrub_tick", t_s, scrub_s, track="job")
 
     mask = np.concatenate(masks, axis=0)
     out = {c: np.concatenate([d[c] for d in cols], axis=0)
@@ -476,18 +498,25 @@ def run_job(store: BlockStore, query: q.HailQuery, *,
     e2e = (overhead / (cluster.n_nodes * cluster.map_slots)
            + compute_s / cluster.n_nodes + disk_s)
     modeled = overhead / (cluster.n_nodes * cluster.map_slots) + disk_s
-    return JobStats(n_tasks=n_tasks, map_compute_s=compute_s,
-                    overhead_s=overhead, bytes_read=bytes_read,
-                    end_to_end_s=e2e,
-                    record_reader_s=compute_s / cluster.n_nodes + disk_s,
-                    results=results, rescheduled_tasks=rescheduled,
-                    split_s=split_s, blocks_indexed=blocks_indexed,
-                    index_build_s=sum(build_s), build_s=build_s,
-                    full_scan_blocks=full_scan_blocks, modeled_s=modeled,
-                    blocks_demoted=blocks_demoted, rekey_s=sum(demote_s),
-                    demote_s=demote_s,
-                    blocks_quarantined=blocks_quarantined,
-                    corrupt_retries=corrupt_retries, scrub_s=scrub_s)
+    stats = JobStats(n_tasks=n_tasks, map_compute_s=compute_s,
+                     overhead_s=overhead, bytes_read=bytes_read,
+                     end_to_end_s=e2e,
+                     record_reader_s=compute_s / cluster.n_nodes + disk_s,
+                     results=results, rescheduled_tasks=rescheduled,
+                     split_s=split_s, blocks_indexed=blocks_indexed,
+                     index_build_s=sum(build_s), build_s=build_s,
+                     full_scan_blocks=full_scan_blocks, modeled_s=modeled,
+                     blocks_demoted=blocks_demoted, rekey_s=sum(demote_s),
+                     demote_s=demote_s,
+                     blocks_quarantined=blocks_quarantined,
+                     corrupt_retries=corrupt_retries, scrub_s=scrub_s)
+    obs_trace.complete_wall("job", t_start, compute_s, track="job",
+                            args={"tasks": n_tasks,
+                                  "bytes_read": bytes_read,
+                                  "blocks_indexed": blocks_indexed,
+                                  "rescheduled": rescheduled})
+    obs_metrics.observe_job(stats)
+    return stats
 
 
 # ---------------------------------------------------------------------------

@@ -42,6 +42,7 @@ from repro.core import parse as ps
 from repro.core.fault import CorruptBlockError, UnrecoverableDataError
 from repro.core.schema import ROWID, Schema
 from repro.core.store import BlockStore
+from repro.obs import trace as obs_trace
 
 
 @dataclasses.dataclass(frozen=True)
@@ -322,16 +323,20 @@ def _gather_replica_inputs(store: BlockStore, rid: int, bsel: np.ndarray,
     if cache is not None:
         hit = cache.get(key)
         if hit is not None:
+            obs_trace.instant("block_cache_hit", track="cache",
+                              args={"replica": rid, "blocks": len(bsel)})
             return hit
     rep = store.replicas[rid]
     # verify on FILL, not on hit: cached gathers are separate device arrays
     # already proven against the stored checksums, so hot splits pay zero
     # verification cost (the clean-path overhead bound in bench_fault)
-    _verify_replica_blocks(store, rid, bsel, (col,) + proj_cols)
-    val = (rep.cols[col][bsel],
-           jnp.stack([rep.cols[c][bsel] for c in proj_cols], axis=-1),
-           _bad_mask(store, rid)[bsel],
-           rep.mins[bsel])
+    with obs_trace.span("cache_fill", track="cache",
+                        args={"replica": rid, "blocks": len(bsel)}):
+        _verify_replica_blocks(store, rid, bsel, (col,) + proj_cols)
+        val = (rep.cols[col][bsel],
+               jnp.stack([rep.cols[c][bsel] for c in proj_cols], axis=-1),
+               _bad_mask(store, rid)[bsel],
+               rep.mins[bsel])
     if cache is not None:
         cache.put(key, val)
     return val

@@ -238,6 +238,10 @@ class BlockStore:
         self._note_destructive()
         from repro.kernels import ops
         ops.DISPATCH_COUNTS["blocks_quarantined"] += 1
+        from repro.obs import trace as obs_trace
+        obs_trace.instant("quarantine", track="store",
+                          args={"replica": replica_id, "block": block_id,
+                                "node": node})
 
     def is_quarantined(self, replica_id: int, block_id: int) -> bool:
         return self.namenode.is_quarantined(
@@ -350,6 +354,12 @@ class BlockStore:
         if stats.blocks_repaired:
             self._note_destructive()
         stats.wall_s = _time.perf_counter() - t0
+        from repro.obs import trace as obs_trace
+        obs_trace.complete_wall("repair_blocks", t0, stats.wall_s,
+                                track="store",
+                                args={"repaired": stats.blocks_repaired,
+                                      "unrepairable": stats.unrepairable,
+                                      "bytes": stats.bytes_rewritten})
         return stats
 
     @property

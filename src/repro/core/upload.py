@@ -34,6 +34,22 @@ from repro.core import parse as ps
 from repro.core.schema import ROWID, Schema
 from repro.core.store import (BlockStore, Namenode, Replica, ReplicaInfo,
                               assign_nodes)
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
+
+def _note_upload(kind: str, t0: float, stats: UploadStats):
+    """Fold one finished upload into the flight recorder: an X slice per
+    measured phase on the upload track plus the registry counters."""
+    start = t0
+    for phase, wall in stats.phases.items():
+        obs_trace.complete_wall(f"upload:{phase}", start, wall,
+                                track="upload",
+                                args={"kind": kind,
+                                      "ascii_bytes": stats.ascii_bytes,
+                                      "written_bytes": stats.written_bytes})
+        start += wall
+    obs_metrics.observe_upload(kind, stats)
 
 
 @dataclasses.dataclass
@@ -150,6 +166,7 @@ def hail_upload(schema: Schema, raw_blocks: np.ndarray,
                         written_bytes=written,
                         n_indexes=sum(k is not None for k in sort_keys),
                         phases={"hail": wall})
+    _note_upload("hail", t0, stats)
     return store, stats
 
 
@@ -208,6 +225,7 @@ def hail_lazy_upload(schema: Schema, raw_blocks: np.ndarray,
     stats = UploadStats(wall_s=wall, ascii_bytes=raw_blocks.size,
                         written_bytes=written, n_indexes=0,
                         phases={"hail_lazy": wall})
+    _note_upload("hail_lazy", t0, stats)
     return store, stats
 
 
@@ -246,6 +264,7 @@ def hdfs_upload(schema: Schema, raw_blocks: np.ndarray, replication: int = 3,
     stats = UploadStats(wall_s=wall, ascii_bytes=raw_blocks.size,
                         written_bytes=raw_blocks.size * replication,
                         phases={"hdfs": wall})
+    _note_upload("hdfs", t0, stats)
     return store, stats
 
 
@@ -275,4 +294,5 @@ def hadooppp_upload(schema: Schema, raw_blocks: np.ndarray, sort_key: str,
         extra_read_bytes=s1.written_bytes,  # job re-reads each replica
         n_indexes=1,
         phases=phases)
+    obs_metrics.observe_upload("hadooppp", stats)
     return store, stats

@@ -35,6 +35,7 @@ from repro.kernels.hail_reader import hail_read as _hail_read
 from repro.kernels.hail_reader import hail_read_batch as _hail_read_batch
 from repro.kernels.index_search import index_search as _index_search
 from repro.kernels.pax_scan import pax_scan as _pax_scan
+from repro.obs import trace as _obs_trace
 
 _USE_KERNELS = True
 
@@ -209,6 +210,9 @@ def verify_blocks(data, sums) -> jax.Array:
     (col, block) pairs proven, for the clean-path overhead guard."""
     DISPATCH_COUNTS["verify_blocks"] += 1
     DISPATCH_COUNTS["verify_block_cols"] += int(data.shape[0] * data.shape[1])
+    _obs_trace.instant("verify_blocks", track="kernels", cat="dispatch",
+                       args={"cols": int(data.shape[0]),
+                             "blocks": int(data.shape[1])})
     return _verify_blocks_jit(data, sums)
 
 
@@ -248,6 +252,9 @@ def hail_read(mins, keys, proj, bad, use_index, lo, hi, *,
     n_idx = int(u.astype(bool).sum())
     DISPATCH_COUNTS["index_scan_blocks"] += n_idx
     DISPATCH_COUNTS["full_scan_blocks"] += u.shape[0] - n_idx
+    _obs_trace.instant("hail_read", track="kernels", cat="dispatch",
+                       args={"index_blocks": n_idx,
+                             "full_blocks": int(u.shape[0]) - n_idx})
     fn = _hail_read_jit if _USE_KERNELS else _hail_read_ref_jit
     return fn(mins, keys, proj, bad, jnp.asarray(u, jnp.int32),
               jnp.asarray(lo, jnp.int32), jnp.asarray(hi, jnp.int32),
@@ -274,6 +281,9 @@ def hail_read_batch(mins, keys, proj, bad, use_index, lohi, *,
     n_idx = int(u.astype(bool).sum())
     DISPATCH_COUNTS["index_scan_blocks"] += n_q * n_idx
     DISPATCH_COUNTS["full_scan_blocks"] += n_q * (u.shape[0] - n_idx)
+    _obs_trace.instant("hail_read_batch", track="kernels", cat="dispatch",
+                       args={"queries": n_q, "index_blocks": n_idx,
+                             "full_blocks": int(u.shape[0]) - n_idx})
     fn = _hail_read_batch_jit if _USE_KERNELS else _hail_read_batch_ref_jit
     return fn(mins, keys, proj, bad, jnp.asarray(u, jnp.int32),
               jnp.asarray(lohi), partition_size=partition_size)

@@ -1,0 +1,20 @@
+"""HAIL flight recorder: metrics registry, span tracing, per-query EXPLAIN.
+
+Three seams over the same runtime:
+
+* ``obs.metrics`` — the unified ``MetricsRegistry`` (counters / gauges /
+  histograms with labels, snapshot/delta semantics, collectors sampling
+  the kernel dispatch counters and per-store state).
+* ``obs.trace`` — structured span tracing on measured + simulated clocks
+  with a Chrome trace-event (Perfetto) exporter and validator; zero-cost
+  when no tracer is installed.
+* ``obs.explain`` — ``Ticket.explain()``: the per-query latency
+  decomposition (queue wait vs service, scan modes, cache-tier outcome,
+  build/demote walls charged), exact against the modeled schedule.
+"""
+from repro.obs import explain, metrics, trace  # noqa: F401
+from repro.obs.metrics import (REGISTRY, MetricsRegistry, nearest_rank,  # noqa: F401
+                               observe_flush, observe_job, observe_upload,
+                               register_store)
+from repro.obs.trace import (Tracer, install, uninstall,  # noqa: F401
+                             validate_chrome_trace)

@@ -90,6 +90,9 @@ from repro.core.query import HailQuery
 from repro.core.schema import ROWID
 from repro.core.splitting import Split, hadoop_splits, hail_splits
 from repro.core.store import BlockStore
+from repro.obs import explain as obs_explain
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.runtime.cluster import SimulatedCluster
 from repro.runtime.scheduler import Task, run_schedule
 
@@ -148,6 +151,17 @@ class Ticket:
     error: Optional[str] = None    # typed terminal failure (retry budget
     #   exhausted mid-flush) — set alongside status="failed", never silently
     #   stranded "queued"
+    explain_ctx: Optional[object] = None   # shared per-flush EXPLAIN
+    #   context (obs.explain.FlushExplain), attached by the flush that
+    #   answered this ticket; resolved lazily by ``explain()``
+
+    def explain(self):
+        """Reconstruct why this query took the time it did — queue wait vs
+        service, flush trigger, per-split scan modes, cache-tier outcome,
+        retries survived, build/demotion walls charged.  Returns an
+        ``obs.explain.ExplainRecord`` (render with ``str()``); raises if
+        the ticket has not been through a flush yet."""
+        return obs_explain.explain_ticket(self)
 
 
 @dataclasses.dataclass
@@ -172,6 +186,9 @@ class FlushStats:
     #   members: key-range overlap, or any full-scan block), aligned with
     #   split_s — the scheduler bridge stamps them into Task.query_ids so
     #   run_schedule can emit per-query completion timestamps
+    split_scan_modes: list = dataclasses.field(default_factory=list)
+    # ^ (index_blocks, full_scan_blocks) per executed split, aligned with
+    #   split_s — per-query scan-mode attribution for ``Ticket.explain()``
     query_done_s: dict = dataclasses.field(default_factory=dict)
     # ^ ticket id -> wall seconds after flush start when its answer
     #   FINALIZED (streamed back) — result-cache hits and fully-pruned
@@ -324,9 +341,12 @@ class HailServer:
         t0 = time.perf_counter()
         # tier 2 first: a repeated/subsumed range skips batching, planning
         # and the fused scan entirely — only the misses get batched below
-        missed = [t for t in tickets
-                  if not self._serve_from_result_cache(t)]
-        batches = self._batches(missed)
+        with obs_trace.span("result_cache_probe", track="server",
+                            args={"queries": len(tickets)}):
+            missed = [t for t in tickets
+                      if not self._serve_from_result_cache(t)]
+        with obs_trace.span("batching", track="server"):
+            batches = self._batches(missed)
         stats = FlushStats(n_queries=len(tickets), n_batches=len(batches),
                            n_splits=0,
                            batch_sizes=[len(b) for b in batches])
@@ -347,6 +367,7 @@ class HailServer:
         retries: collections.Counter = collections.Counter()
         try:
             for batch in batches:
+                t_b = time.perf_counter()
                 try:
                     self._run_batch(batch, stats, budget, fail, retries, t0)
                 except UnrecoverableDataError as e:
@@ -371,6 +392,11 @@ class HailServer:
                         del stats.build_s[-extra:]
                         del stats.batch_of_split[-extra:]
                         del stats.queries_of_split[-extra:]
+                        del stats.split_scan_modes[-extra:]
+                finally:
+                    obs_trace.complete_wall(
+                        "batch", t_b, time.perf_counter() - t_b,
+                        track="server", args={"width": len(batch)})
         finally:
             # lifecycle invariants hold even when a batch dies terminally:
             # the injected-failure node is revived and the boundary scrub
@@ -395,6 +421,18 @@ class HailServer:
         if rc:
             stats.result_cache_hits = rc.stats.hits - rc_h0
             stats.result_cache_misses = rc.stats.misses - rc_m0
+        obs_trace.complete_wall("flush", t0, stats.wall_s, track="server",
+                                args={"queries": stats.n_queries,
+                                      "batches": stats.n_batches,
+                                      "splits": stats.n_splits})
+        obs_metrics.observe_flush(stats,
+                                  tenants=[t.tenant for t in tickets])
+        # one shared EXPLAIN context per flush: every ticket (result-cache
+        # hits and failures included) can reconstruct its decomposition
+        # lazily — the frontend enriches it with arrival/trigger/latency
+        ctx = obs_explain.FlushExplain(stats, cluster)
+        for t in tickets:
+            t.explain_ctx = ctx
         return stats
 
     def _serve_from_result_cache(self, t: Ticket) -> bool:
@@ -503,7 +541,9 @@ class HailServer:
         store = self.store
         queries = [t.query for t in batch]
         query0 = queries[0]
-        qplan = q.plan(store, query0)
+        with obs_trace.span("plan", track="server",
+                            args={"width": len(batch)}):
+            qplan = q.plan(store, query0)
         splits = (hail_splits(store, qplan, self.config.cluster.map_slots)
                   if store.layout == "pax" else hadoop_splits(store, qplan))
         fail_after = (int(len(splits) * fail["frac"])
@@ -581,6 +621,9 @@ class HailServer:
                 stats.batch_of_split.append(len(batch))
                 stats.queries_of_split.append(
                     tuple(batch[qi].ticket_id for qi in live))
+                n_idx = sum(bool(qplan.index_scan[b]) for b in sp.block_ids)
+                stats.split_scan_modes.append(
+                    (n_idx, len(sp.block_ids) - n_idx))
         finally:
             if demote_pending > 0.0:
                 # no split carried the demotion wall the claim paid (every
@@ -633,6 +676,9 @@ class HailServer:
                                         n_splits=n_splits)
             ticket.status = "done"
             stats.query_done_s[ticket.ticket_id] = time.perf_counter() - t0
+            obs_trace.instant("finalize", track="server",
+                              args={"ticket": ticket.ticket_id,
+                                    "rows": n_rows})
             if recipe is not None:
                 col, lo, hi = ticket.query.filter
                 rc.put(col, lo, hi, tuple(ticket.query.projection),
@@ -647,7 +693,13 @@ class HailServer:
                 finalize(qi)               # live on nothing: done at once
         for res, shared, t_disp, live in dispatched:
             jax.block_until_ready(res[0].mask)
-            stats.split_s.append(time.perf_counter() - t_disp)
+            split_wall = time.perf_counter() - t_disp
+            stats.split_s.append(split_wall)
+            obs_trace.complete_wall("split", t_disp, split_wall,
+                                    track="server",
+                                    args={"batch_width": len(batch),
+                                          "queries": [batch[qi].ticket_id
+                                                      for qi in live]})
             stats.bytes_read += int(shared)
             for qi in live:
                 per_query[qi].append(res[qi])
@@ -746,18 +798,34 @@ class ServerFrontend:
         self._seq += 1
         if (np.isfinite(self.policy.window_s)
                 and self._full_batch_pending()):
-            self._flush_cycle(self.now)
+            self._flush_cycle(self.now, trigger="batch_full")
 
     def drain(self) -> "ServerFrontend":
         """Flush until the queue empties (the end-of-workload drain; also
         the ONLY trigger under the ``window_s=inf`` baseline policy)."""
         while self._queue:
-            if not self._flush_cycle(max(self.now, self.busy_until)):
+            if not self._flush_cycle(max(self.now, self.busy_until),
+                                     trigger="drain"):
                 break                  # nothing admissible: avoid spinning
         return self
 
     def percentile_latency(self, p: float) -> float:
-        return float(np.percentile(list(self.latencies.values()), p))
+        """NEAREST-RANK percentile of the completed queries' simulated
+        latencies — pinned semantics (``obs.metrics.nearest_rank``, never
+        interpolated), so bench p50/p99 guards always report an actually
+        observed latency and small-N results cannot shift with a numpy
+        interpolation default.
+
+        >>> fe = ServerFrontend.__new__(ServerFrontend)
+        >>> fe.latencies = {0: 1.0, 1: 2.0, 2: 3.0, 3: 4.0}
+        >>> fe.percentile_latency(50)
+        2.0
+        >>> fe.percentile_latency(99)
+        4.0
+        >>> fe.percentile_latency(25)
+        1.0
+        """
+        return obs_metrics.nearest_rank(self.latencies.values(), p)
 
     def _advance(self, to: float) -> None:
         """Fire every window deadline that falls at or before ``to``."""
@@ -766,7 +834,7 @@ class ServerFrontend:
             deadline = min(p.arrival_s for p in self._queue) + w
             if deadline > to:
                 break
-            if not self._flush_cycle(deadline):
+            if not self._flush_cycle(deadline, trigger="window"):
                 break                  # nothing admissible: avoid spinning
         self.now = max(self.now, to)
 
@@ -785,11 +853,15 @@ class ServerFrontend:
         return any(n >= self.server.config.max_batch
                    for key, n in counts.items() if key[0] != "__single__")
 
-    def _flush_cycle(self, trigger_s: float) -> bool:
+    def _flush_cycle(self, trigger_s: float,
+                     trigger: str = "manual") -> bool:
         """One cycle: WFQ-order the pending batches, admit up to the
         policy's capacity through the server, flush, and stream modeled
-        per-query completion times into ``latencies``.  Returns whether any
-        query was admitted (False = no progress possible right now)."""
+        per-query completion times into ``latencies``.  ``trigger`` names
+        the policy condition that fired (window / batch_full / drain) —
+        recorded on every admitted ticket's EXPLAIN context and trace
+        events.  Returns whether any query was admitted (False = no
+        progress possible right now)."""
         groups: dict = {}
         for p in self._queue:
             groups.setdefault(self._batch_key(p), []).append(p)
@@ -824,17 +896,50 @@ class ServerFrontend:
         stats = self.server.flush()
         self.flushes.append(stats)
         cm = self.server.config.cluster
+        tasks = flush_tasks(stats)
         sched = run_schedule(
-            flush_tasks(stats),
+            tasks,
             SimulatedCluster(n_nodes=cm.n_nodes, map_slots=cm.map_slots),
             spec_factor=None)
+        # enrich the flush's shared EXPLAIN context with the frontend's
+        # view: the firing trigger, simulated start, per-ticket arrivals —
+        # and hand it THIS schedule, so explain() decomposes exactly the
+        # latency reported below
+        ctx = admitted[0][1].explain_ctx
+        if ctx is not None:
+            ctx.trigger = trigger
+            ctx.start_s = start
+            ctx.provide_schedule(sched, tasks)
+        tracer = obs_trace.current()
+        if tracer is not None:
+            tracer.complete_sim(
+                "flush_cycle", start, sched.makespan_s, track="frontend",
+                args={"trigger": trigger, "queries": len(admitted),
+                      "makespan_s": sched.makespan_s})
+            # query slices (and their flow STARTS) go first, so the
+            # schedule's per-task flow steps chain arrival -> splits
+            for p, tk in admitted:
+                done = start + sched.query_completion_s.get(
+                    tk.ticket_id, 0.0)
+                tracer.complete_sim(
+                    f"q{tk.ticket_id}", p.arrival_s, done - p.arrival_s,
+                    track=f"tenant {tk.tenant}",
+                    args={"ticket": tk.ticket_id, "trigger": trigger,
+                          "queue_wait_s": start - p.arrival_s})
+                tracer.flow("s", tk.ticket_id, p.arrival_s,
+                            track=f"tenant {tk.tenant}")
+            tracer.add_schedule(sched, tasks, base_s=start)
         for p, tk in admitted:
             self.completed[tk.ticket_id] = tk
+            if ctx is not None:
+                ctx.arrival_s[tk.ticket_id] = p.arrival_s
             if tk.status == "failed":
                 self.failed.append(tk)
                 continue
             done = start + sched.query_completion_s.get(tk.ticket_id, 0.0)
             self.latencies[tk.ticket_id] = done - p.arrival_s
+            if ctx is not None:
+                ctx.latency_s[tk.ticket_id] = done - p.arrival_s
         self.busy_until = start + sched.makespan_s
         self.now = max(self.now, trigger_s)
         return True

@@ -26,6 +26,7 @@ import dataclasses
 import time
 
 from repro.core.store import BlockStore
+from repro.obs import trace as obs_trace
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,15 +96,33 @@ class Scrubber:
         t0 = time.perf_counter()
         store = self.store
         self.stats.ticks += 1
+        verified = quarantined = repaired = 0
         for rid, b in self._schedule():
             self.stats.blocks_verified += 1
+            verified += 1
             if not store.verify_block(rid, b):
                 store.quarantine_block(rid, b)
                 self.stats.blocks_quarantined += 1
+                quarantined += 1
+                obs_trace.instant("scrub_quarantine", track="scrubber",
+                                  args={"replica": rid, "block": b})
         if self.config.repair and store.namenode.quarantined:
+            t_r = time.perf_counter()
             rs = store.repair_blocks()
             self.stats.blocks_repaired += rs.blocks_repaired
             self.stats.unrepairable += rs.unrepairable
             self.stats.bytes_rewritten += rs.bytes_rewritten
+            repaired = rs.blocks_repaired
+            obs_trace.complete_wall("repair", t_r,
+                                    time.perf_counter() - t_r,
+                                    track="scrubber",
+                                    args={"repaired": rs.blocks_repaired,
+                                          "unrepairable": rs.unrepairable})
         self.stats.wall_s += time.perf_counter() - t0
+        obs_trace.complete_wall("scrub_tick", t0,
+                                time.perf_counter() - t0, track="scrubber",
+                                args={"cursor": self._cursor,
+                                      "verified": verified,
+                                      "quarantined": quarantined,
+                                      "repaired": repaired})
         return self.stats

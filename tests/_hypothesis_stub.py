@@ -93,7 +93,11 @@ def given(*strategies):
 
         @functools.wraps(fn)
         def wrapper(*fixture_args, **fixture_kw):
-            n = getattr(fn, "__stub_max_examples__", DEFAULT_MAX_EXAMPLES)
+            # Read from the wrapper: functools.wraps copied the attribute
+            # here when @settings sat below @given, and @settings sets it
+            # here directly when it sits above (the conventional order).
+            n = getattr(wrapper, "__stub_max_examples__",
+                        DEFAULT_MAX_EXAMPLES)
             seed = zlib.crc32(fn.__qualname__.encode())
             for i in range(n):
                 rng = np.random.default_rng((seed, i))

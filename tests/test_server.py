@@ -885,3 +885,96 @@ def test_frontend_weighted_fair_admission(served_store):
     for tk in fe.completed.values():
         _assert_ticket_matches(tk, _oracle_rows(served_store, tk.query))
     assert fe.percentile_latency(99) >= fe.percentile_latency(50)
+
+
+# ---------------------------------------------------------------------------
+# Flight-recorder satellites: latency bookkeeping cross-checks (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+
+def test_percentile_latency_nearest_rank_small_n():
+    """Pinned nearest-rank semantics: every percentile is an actually
+    observed sample — never interpolated — so small-N guards are exact."""
+    fe = js.ServerFrontend.__new__(js.ServerFrontend)
+    fe.latencies = {0: 0.3, 1: 0.1, 2: 0.2, 3: 0.4}
+    assert fe.percentile_latency(25) == 0.1    # ceil(.25*4) = 1st smallest
+    assert fe.percentile_latency(50) == 0.2    # ceil(.50*4) = 2nd
+    assert fe.percentile_latency(51) == 0.3    # ceil(.51*4) = 3rd
+    assert fe.percentile_latency(99) == 0.4    # ceil(.99*4) = the max
+    assert fe.percentile_latency(100) == 0.4
+    fe.latencies = {7: 1.5}                    # N=1: everything is the one
+    assert fe.percentile_latency(1) == fe.percentile_latency(99) == 1.5
+    fe.latencies = {}
+    with pytest.raises(ValueError):
+        fe.percentile_latency(50)
+
+
+def test_percentile_latency_doctest_runs():
+    import doctest
+    results = doctest.DocTestRunner().run(
+        doctest.DocTestFinder().find(js.ServerFrontend.percentile_latency,
+                                     globs={"ServerFrontend":
+                                            js.ServerFrontend})[0])
+    assert results.attempted >= 3 and results.failed == 0
+
+
+@settings(max_examples=2, deadline=None)
+@given(st.integers(0, 2**31 - 1),              # data + workload seed
+       st.integers(2, 4))                      # queries per flush
+def test_query_done_vs_modeled_completion_consistency(seed, n_q):
+    """``FlushStats.query_done_s`` (measured stream-back offsets, keyed by
+    ticket id) vs ``ScheduleResult.query_completion_s`` (modeled, keyed by
+    the query ids the scheduler tasks carry) on randomized flushes with
+    repeats (result-cache hits), adaptive commits and a demotion:
+
+    * every done ticket streams back exactly once, within the flush wall;
+    * the modeled side covers exactly the carried ids — a subset of the
+      done tickets (no phantom/stale ids), each completing in
+      ``(0, makespan]``;
+    * a done ticket carried by NO task was answered without a scan
+      (result tier, or pruned everywhere) and so completes at offset 0.
+    """
+    schema, eager, lazy = _make_store_pair(seed)
+    cfg = mr.AdaptiveConfig(offer_rate=0.5)
+    server = js.HailServer(lazy, js.ServerConfig(max_batch=4, adaptive=cfg))
+    cm = server.config.cluster
+    rng = np.random.default_rng(seed ^ 0xd21f7)
+    history: list[tuple] = []
+    verified = 0
+    for step in range(4):
+        for _ in range(n_q):
+            if history and rng.random() < 0.5:   # repeat: result-tier path
+                flt = history[int(rng.integers(0, len(history)))]
+            else:
+                lo, hi = sorted(rng.integers(0, VMAX, 2).tolist())
+                flt = (("c0", "c1")[step % 2], int(lo), int(hi))
+            history.append(flt)
+            server.submit(q.HailQuery(filter=flt, projection=("c2",)))
+        if step == 2:                            # race a demotion in
+            keyed = [i for i, r in enumerate(lazy.replicas)
+                     if r.sort_key is not None and r.indexed.any()]
+            if keyed:
+                lazy.demote_replica(keyed[0])
+        fl = server.flush()
+        new = server.tickets[verified:]
+        verified = len(server.tickets)
+
+        done = {t.ticket_id for t in new if t.status == "done"}
+        assert set(fl.query_done_s) == done
+        assert all(0.0 <= v <= fl.wall_s + 1e-6
+                   for v in fl.query_done_s.values())
+
+        tasks = js.flush_tasks(fl)
+        sched = run_schedule(tasks,
+                             SimulatedCluster(n_nodes=cm.n_nodes,
+                                              map_slots=cm.map_slots),
+                             spec_factor=None)
+        carried = {qid for task in tasks for qid in task.query_ids}
+        assert set(sched.query_completion_s) == carried
+        assert carried <= done
+        for qid, c in sched.query_completion_s.items():
+            assert 0.0 < c <= sched.makespan_s + 1e-9
+        for t in new:
+            if t.status == "done" and t.ticket_id not in carried:
+                assert t.result.from_cache or t.result.n_rows == 0
+                assert t.explain().completion_s == 0.0
