@@ -1,0 +1,165 @@
+"""Multi-device sharded flush scans + heat-driven dynamic replication.
+
+Two sections, both on a FORCED 8-device host platform (set before any jax
+import, like launch/dryrun_hail.py):
+
+* **Sharded scans** — one job's splits dispatch in waves of n_dev through
+  the shard_map'd fused reader: per-device fused dispatches drop from S
+  (serial) to ceil(S / n_dev), the paper's fewer-dispatches-per-worker win
+  widened across devices.  The guard pins the dispatch model exactly and
+  requires row-set equality with the single-device oracle.
+
+* **Dynamic replication** — the ReplicationController replaces the static
+  factor-of-3: a hot filter column with no index slot triggers
+  ``add_replica`` (the next adaptive job claims + converges it); after the
+  workload shifts away the replica's heat delta flatlines and it is
+  decommissioned back down.  The guard requires at least one full
+  add -> claim -> decommission cycle and the post-claim job to be fully
+  index-scanned.
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import math  # noqa: E402
+
+from benchmarks.common import timed, uservisits_raw  # noqa: E402
+from repro.core import governor as gv  # noqa: E402
+from repro.core import mapreduce as mr  # noqa: E402
+from repro.core import schema as sc  # noqa: E402
+from repro.core import upload as up  # noqa: E402
+from repro.core.query import HailQuery  # noqa: E402
+from repro.kernels import ops  # noqa: E402
+from repro.launch.mesh import make_mesh  # noqa: E402
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
+                         "BENCH_kernels.json")
+
+N_DEV = 8
+QUERY = HailQuery(filter=("visitDate", 7305, 9000), projection=("sourceIP",))
+Q_HOT = HailQuery(filter=("adRevenue", 100, 20000), projection=("sourceIP",))
+Q_VD = HailQuery(filter=("visitDate", 7305, 7670), projection=("sourceIP",))
+Q_SIP = HailQuery(filter=("sourceIP", 0, 1 << 30), projection=("visitDate",))
+
+
+def sharded_scan(blocks: int, rows: int) -> tuple[dict, list]:
+    import jax
+    mesh = make_mesh((jax.device_count(),), ("data",))
+    cluster = mr.ClusterModel(n_nodes=6, map_slots=1)
+    _, raw = uservisits_raw(blocks=blocks, rows=rows)
+    store, _ = up.hail_upload(sc.USERVISITS, raw,
+                              ["visitDate", "sourceIP"],
+                              n_nodes=cluster.n_nodes)
+
+    mr.run_job(store, QUERY, cluster=cluster, mesh=mesh)      # warm jit
+    with ops.stats_scope() as st:
+        wall_sh, job_sh = timed(mr.run_job, store, QUERY, cluster=cluster,
+                                mesh=mesh, warmup=0, reps=3)
+    wall_se, job_se = timed(mr.run_job, store, QUERY, cluster=cluster,
+                            warmup=1, reps=3)
+    s = len(job_sh.split_s)
+    waves = st.dispatches["hail_read_sharded_waves"] // 3    # 3 timed reps
+    model = math.ceil(s / N_DEV)
+    d = {
+        "dist_n_devices": N_DEV,
+        "dist_splits": s,
+        "dist_waves": waves,
+        "dist_per_device_dispatches": waves,
+        "dist_dispatch_model": model,
+        "dist_makespan_ratio": round(model / s, 4),
+        # ^ modeled per-device fused-dispatch ratio, sharded vs serial (the
+        #   serial path issues all S dispatches on one device)
+        "dist_rows_equal": (job_sh.results["n_rows"]
+                            == job_se.results["n_rows"]
+                            and job_sh.bytes_read == job_se.bytes_read),
+        "dist_sharded_wall_s": round(wall_sh, 4),
+        "dist_serial_wall_s": round(wall_se, 4),
+    }
+    rows_out = [
+        ("dist_sharded_job", wall_sh * 1e6,
+         f"splits={s};waves={waves};model={model};"
+         f"rows_equal={d['dist_rows_equal']}"),
+        ("dist_serial_job", wall_se * 1e6,
+         f"per_dev_ratio={d['dist_makespan_ratio']}"),
+    ]
+    return d, rows_out
+
+
+def replication_cycle(blocks: int, rows: int) -> tuple[dict, list]:
+    from repro.obs.metrics import MetricsRegistry
+    cluster = mr.ClusterModel(n_nodes=6, map_slots=1)
+    _, raw = uservisits_raw(blocks=blocks, rows=rows)
+    store, _ = up.hail_upload(sc.USERVISITS, raw,
+                              ["visitDate", "sourceIP"],
+                              n_nodes=cluster.n_nodes)
+    ctl = gv.replicate(store, min_replication=2, max_replication=5,
+                       hot_misses=1, cold_ticks=4,
+                       registry=MetricsRegistry())
+    adaptive = mr.AdaptiveConfig(offer_rate=1.0)
+    run = lambda qq: mr.run_job(store, qq, adaptive=adaptive,  # noqa: E731
+                                cluster=cluster)
+
+    # hot phase: adRevenue has no index slot -> miss heat adds a replica at
+    # the first boundary; the next adRevenue job claims + converges it
+    # (visitDate / sourceIP interleave so the original replicas stay warm)
+    hot_modeled = [run(Q_HOT).modeled_s]
+    live_after_add = len(store.live_replica_ids())
+    for qq in (Q_VD, Q_SIP, Q_HOT):
+        run(qq)
+    converged = run(Q_HOT)
+    # shifted phase: adRevenue vanishes -> the added replica's heat delta
+    # flatlines for cold_ticks boundaries and it is decommissioned
+    for _ in range(4):
+        run(Q_VD)
+        run(Q_SIP)
+    d = {
+        "dist_replicas_added": ctl.replicas_added,
+        "dist_replicas_decommissioned": ctl.replicas_decommissioned,
+        "dist_live_replicas_peak": live_after_add,
+        "dist_live_replicas_final": len(store.live_replica_ids()),
+        "dist_hot_modeled_s": round(hot_modeled[0], 4),
+        "dist_converged_modeled_s": round(converged.modeled_s, 4),
+        "dist_converged_full_scan_blocks": converged.full_scan_blocks,
+        "dist_replication_ticks": ctl.ticks,
+    }
+    rows_out = [
+        ("dist_replication_hot_job", hot_modeled[0] * 1e6,
+         f"added={ctl.replicas_added};peak_live={live_after_add}"),
+        ("dist_replication_converged_job", converged.modeled_s * 1e6,
+         f"full_scan_blocks={converged.full_scan_blocks};"
+         f"decommissioned={ctl.replicas_decommissioned};"
+         f"final_live={d['dist_live_replicas_final']}"),
+    ]
+    return d, rows_out
+
+
+def run(quick: bool = False):
+    blocks, rows = (12, 512) if quick else (32, 2048)
+    d, rows_out = sharded_scan(blocks, rows)
+    d2, rows2 = replication_cycle(blocks, rows)
+    d.update(d2)
+    rows_out += rows2
+
+    blob = {}
+    if os.path.exists(JSON_PATH):
+        with open(JSON_PATH) as f:
+            blob = json.load(f)
+    blob.update(d)
+    with open(JSON_PATH, "w") as f:
+        json.dump(blob, f, indent=1)
+    return rows_out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small store for CI (12x512 blocks)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, us, derived in run(quick=args.quick):
+        print(f"{name},{us:.1f},{derived}")

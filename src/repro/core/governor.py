@@ -46,7 +46,8 @@ destructive work lives in ``store.demote_replica`` so every store invariant
 from __future__ import annotations
 
 import dataclasses
-from typing import TYPE_CHECKING, Optional, Sequence
+import re
+from typing import TYPE_CHECKING, Any, Optional, Sequence
 
 if TYPE_CHECKING:  # import cycle guard: store never imports governor
     from repro.core.store import BlockStore
@@ -229,7 +230,8 @@ class IndexGovernor:
         if self.config.max_indexed_blocks is not None:
             limits.append(float(self.config.max_indexed_blocks))
         if self.config.max_indexed_bytes is not None:
-            per_block = max(store.replicas[0].nbytes // store.n_blocks, 1)
+            per_block = max(
+                store.template_replica().nbytes // store.n_blocks, 1)
             limits.append(float(self.config.max_indexed_bytes // per_block))
         return min(limits) if limits else float("inf")
 
@@ -263,7 +265,7 @@ class IndexGovernor:
         log = store.access_log
         best, best_score = None, None
         for i, rep in enumerate(store.replicas):
-            if rep.sort_key is None or rep.sort_key in protect:
+            if rep.retired or rep.sort_key is None or rep.sort_key in protect:
                 continue
             if rep.indexed is None or not rep.indexed.any():
                 continue
@@ -319,3 +321,189 @@ def govern(store: "BlockStore", *,
                                        claim_miss_jobs=claim_miss_jobs))
     store.governor = gov
     return gov
+
+
+# ---------------------------------------------------------------------------
+# Dynamic replication: replica COUNT follows measured heat
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicationConfig:
+    """Heat → replica-count policy (replaces the static factor-of-3).
+
+    Scale UP: a filter column whose reads keep MISSING (full-scanning)
+    while no replica is claimable for it (every live replica already keyed
+    elsewhere) gets a fresh replica once its per-tick miss heat reaches
+    ``hot_misses`` — the next adaptive job claims the new replica for that
+    column (HAIL: one clustered index per replica, so a replica is an
+    index *slot*).  Scale DOWN: a live replica whose own read heat across
+    ALL columns stays at zero for ``cold_ticks`` consecutive ticks is
+    decommissioned.  ``min_replication``/``max_replication`` bound the
+    live replica count; the last-healthy-copy safety is the store's own
+    invariant (``decommission_replica`` refuses).  ``n_nodes``: cluster
+    size for placement (inferred from live replicas when None).
+    """
+    min_replication: int = 2
+    max_replication: int = 5
+    hot_misses: int = 1
+    cold_ticks: int = 2
+    n_nodes: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicationEvent:
+    kind: str                      # 'add' | 'decommission'
+    replica_id: int
+    column: Optional[str]          # the hot column (adds only)
+    tick: int
+
+
+class ReplicationController:
+    """Closes the replication loop from MEASURED heat.
+
+    The controller owns no bespoke plumbing into the read path: its inputs
+    are ``registry.snapshot()`` DELTAS of the per-store collector's
+    ``governor.heat{column=..,replica=..}`` / ``governor.miss_heat{..}``
+    gauges (the AccessLog mirrored into the flight recorder), so anything
+    the registry can see — cached reads replayed into the AccessLog
+    included — moves the same controller.  ``run_job`` and
+    ``HailServer.flush`` tick it at job/flush boundaries, like the
+    scrubber.  Decisions delegate to ``BlockStore.add_replica`` /
+    ``decommission_replica``; this class only decides.
+    """
+
+    _HEAT = re.compile(r"^governor\.(?P<kind>heat|miss_heat)"
+                       r"\{column=(?P<col>[^,}]+),replica=(?P<rid>\d+)\}$")
+
+    def __init__(self, store: "BlockStore",
+                 config: ReplicationConfig = ReplicationConfig(),
+                 registry: Any = None):
+        from repro.obs import metrics as obs_metrics
+        self.store = store
+        self.config = config
+        self.registry = (registry if registry is not None
+                         else obs_metrics.REGISTRY)
+        self._collector = obs_metrics.register_store(store, self.registry)
+        self.events: list[ReplicationEvent] = []
+        self.ticks = 0
+        self._cold_streak: dict[int, int] = {}
+        self._prev = self.registry.snapshot()
+
+    def detach(self):
+        """Unregister the store collector (store is done)."""
+        self.registry.unregister_collector(self._collector)
+        if self.store.replicator is self:
+            self.store.replicator = None
+
+    @property
+    def replicas_added(self) -> int:
+        return sum(e.kind == "add" for e in self.events)
+
+    @property
+    def replicas_decommissioned(self) -> int:
+        return sum(e.kind == "decommission" for e in self.events)
+
+    def _interval_heat(self) -> tuple[dict, dict]:
+        """(total heat, miss heat) per (replica, column) since last tick,
+        parsed from the registry's snapshot delta."""
+        snap = self.registry.snapshot()
+        d = self.registry.delta(self._prev, after=snap)
+        self._prev = snap
+        heat: dict[tuple[int, str], float] = {}
+        miss: dict[tuple[int, str], float] = {}
+        for series, v in d.items():
+            m = self._HEAT.match(series)
+            if m is None:
+                continue
+            key = (int(m.group("rid")), m.group("col"))
+            (heat if m.group("kind") == "heat" else miss)[key] = v
+        return heat, miss
+
+    def tick(self) -> list[ReplicationEvent]:
+        """One control quantum at a job/flush boundary."""
+        self.ticks += 1
+        heat, miss = self._interval_heat()
+        added = self._scale_up(miss)
+        out = added + self._scale_down(
+            heat, protect={e.replica_id for e in added})
+        self.events.extend(out)
+        return out
+
+    def _scale_up(self, miss: dict) -> list[ReplicationEvent]:
+        store, cfg = self.store, self.config
+        col_miss: dict[str, float] = {}
+        for (rid, col), v in miss.items():
+            col_miss[col] = col_miss.get(col, 0.0) + v
+        out = []
+        for col, v in sorted(col_miss.items(), key=lambda kv: -kv[1]):
+            if v < cfg.hot_misses:
+                break
+            if len(store.live_replica_ids()) >= cfg.max_replication:
+                break
+            if store.adaptive_replica_for(col) is not None:
+                continue     # keyed or claimable replica already serves it
+            try:
+                rid = store.add_replica(n_nodes=cfg.n_nodes)
+            except ValueError:
+                break        # cluster/healthy-copy limits: nothing to do
+            self._cold_streak[rid] = 0
+            self.registry.inc("replication.replicas_added", 1, column=col)
+            from repro.obs import trace as obs_trace
+            obs_trace.instant("replicate", track="governor",
+                              args={"replica": rid, "column": col,
+                                    "miss_heat": v})
+            out.append(ReplicationEvent("add", rid, col, self.ticks))
+        return out
+
+    def _scale_down(self, heat: dict,
+                    protect: set = frozenset()) -> list[ReplicationEvent]:
+        store, cfg = self.store, self.config
+        rid_heat: dict[int, float] = {}
+        for (rid, col), v in heat.items():
+            rid_heat[rid] = rid_heat.get(rid, 0.0) + v
+        for rid in store.live_replica_ids():
+            if rid_heat.get(rid, 0.0) > 0 or rid in protect:
+                self._cold_streak[rid] = 0    # just-added replicas are warm
+            else:
+                self._cold_streak[rid] = self._cold_streak.get(rid, 0) + 1
+        out = []
+        # longest cold streak first; ties toward the youngest replica
+        for rid in sorted(store.live_replica_ids(),
+                          key=lambda i: (-self._cold_streak.get(i, 0), -i)):
+            if len(store.live_replica_ids()) <= cfg.min_replication:
+                break
+            if self._cold_streak.get(rid, 0) < cfg.cold_ticks:
+                continue
+            try:
+                dropped = store.decommission_replica(rid)
+            except ValueError:
+                continue     # would strand a block's last healthy copy
+            self._cold_streak.pop(rid, None)
+            self.registry.inc("replication.replicas_decommissioned", 1)
+            from repro.obs import trace as obs_trace
+            obs_trace.instant("decommission", track="governor",
+                              args={"replica": rid,
+                                    "indexes_dropped": dropped})
+            out.append(ReplicationEvent("decommission", rid, None,
+                                        self.ticks))
+        return out
+
+
+def replicate(store: "BlockStore", *,
+              min_replication: int = 2, max_replication: int = 5,
+              hot_misses: int = 1, cold_ticks: int = 2,
+              n_nodes: Optional[int] = None,
+              registry: Any = None) -> ReplicationController:
+    """Attach a heat-driven replication controller (one-call entry point).
+    ``run_job``/``HailServer.flush`` tick ``store.replicator`` at their
+    job/flush boundaries."""
+    ctl = ReplicationController(
+        store,
+        ReplicationConfig(min_replication=min_replication,
+                          max_replication=max_replication,
+                          hot_misses=hot_misses, cold_ticks=cold_ticks,
+                          n_nodes=n_nodes),
+        registry=registry)
+    store.replicator = ctl
+    return ctl

@@ -289,6 +289,7 @@ def run_job(store: BlockStore, query: q.HailQuery, *,
             reduce_fn: Optional[Callable] = None,
             fail_node_at: Optional[float] = None,
             reader: str = "jnp",
+            mesh=None,
             adaptive: Optional[AdaptiveConfig] = None,
             recovery: RecoveryConfig = RecoveryConfig(),
             on_split_complete: Optional[Callable] = None) -> JobStats:
@@ -297,6 +298,17 @@ def run_job(store: BlockStore, query: q.HailQuery, *,
     reader: 'jnp' (batched jnp record reader) or 'kernels' (fused Pallas
     split reader — one pallas_call dispatch per split; interpret mode on
     CPU, so 'jnp' stays the container default).
+
+    mesh: a ``jax.sharding.Mesh`` to SHARD the scan over — splits are
+    gathered host-side as usual (cache/verify/attribution per split,
+    preserving serial semantics for piggyback commits and failover) but
+    dispatched in WAVES of up to n_dev splits through ONE shard_map'd
+    fused reader, each split's block tile on its own device (per-device
+    fused dispatches = ceil(n_splits / n_dev)).  The scan axes come from
+    ``dist.sharding.scan_mesh_axes`` (size-1 axes dropped); a mesh with no
+    multi-device scan axis, a non-PAX store, or an unfiltered query falls
+    back to the serial per-split path.  Row-sets are byte-identical to the
+    single-device path.
 
     adaptive: when set (and the job filters a PAX store), full-scan splits
     piggyback clustered-index builds for an offered fraction of their
@@ -373,6 +385,17 @@ def run_job(store: BlockStore, query: q.HailQuery, *,
                                        list(sp.block_ids))
         return q.read_hail(store, query, qplan, list(sp.block_ids))
 
+    # --- sharded scan: waves of up to n_dev splits per fused dispatch -----
+    use_sharded = (mesh is not None and store.layout == "pax"
+                   and query.filter is not None)
+    scan_axes: tuple = ()
+    n_dev = 1
+    if use_sharded:
+        from repro.dist import sharding as shd
+        scan_axes = shd.scan_mesh_axes(mesh)
+        n_dev = shd.scan_device_count(mesh, scan_axes)
+        use_sharded = bool(scan_axes) and n_dev > 1
+
     # --- dispatch phase: queue every split's read without blocking --------
     # (jax dispatches asynchronously; the per-split reads pipeline instead
     # of running dispatch->barrier->dispatch->barrier as the seed did)
@@ -396,12 +419,29 @@ def run_job(store: BlockStore, query: q.HailQuery, *,
                     f"block {b}: re-plan retry budget "
                     f"({recovery.max_retries}) exhausted")
 
+    wave: list[tuple] = []                # (split, gathered inputs) buffer
+
+    def flush_wave():
+        """Dispatch the buffered wave as ONE shard_map'd fused read; the
+        gathered inputs are snapshots, so commits/demotions/failover that
+        landed since gathering cannot change these splits' row-sets."""
+        if not wave:
+            return
+        out = q.read_hail_batch_sharded(store, [query],
+                                        [g for _, g in wave],
+                                        mesh, scan_axes)
+        for res_list, _shared in out:
+            dispatched.append((res_list[0], time.perf_counter()))
+        wave.clear()
+
     t_start = time.perf_counter()
     i = 0
     pending = list(splits)
     while i < len(pending):
         if fail_after is not None and i == fail_after and failed_node is None:
             # kill the node that would serve the next split and re-plan
+            # (wave-buffered splits already gathered their inputs — like
+            # completed map tasks, their results stand)
             pending, qplan, failed_node, rescheduled = failover_replan(
                 store, query, pending, i)
             if rescheduled:
@@ -412,7 +452,12 @@ def run_job(store: BlockStore, query: q.HailQuery, *,
         sp = pending[i]
         i += 1
         try:
-            res = read_split(sp)
+            if use_sharded:
+                gathered = q.gather_shared_scan_inputs(
+                    store, [query], qplan, list(sp.block_ids))
+                res = None
+            else:
+                res = read_split(sp)
         except CorruptBlockError as e:
             # detection -> recovery: quarantine the corrupt copy at the
             # namenode, re-plan against the now-smaller replica set (plan
@@ -432,7 +477,10 @@ def run_job(store: BlockStore, query: q.HailQuery, *,
                       index_scan=bool(qplan.index_scan[b]))
                 for b in sp.block_ids)
             continue
-        dispatched.append((res, time.perf_counter()))
+        if use_sharded:
+            wave.append((sp, gathered))
+        else:
+            dispatched.append((res, time.perf_counter()))
         if not sp.index_scan:
             full_scan_blocks += len(sp.block_ids)
         # --- adaptive piggyback: this full-scan split already read these
@@ -449,6 +497,9 @@ def run_job(store: BlockStore, query: q.HailQuery, *,
             d_wall += dd_wall
         build_s.append(b_wall)
         demote_s.append(d_wall)
+        if use_sharded and len(wave) == n_dev:
+            flush_wave()
+    flush_wave()   # ragged final wave (padded to n_dev with dead splits)
 
     # --- completion phase: one pass of barriers over the queued results ---
     bytes_read = 0
@@ -480,6 +531,11 @@ def run_job(store: BlockStore, query: q.HailQuery, *,
         store.scrubber.tick()
         scrub_s = time.perf_counter() - t_s
         obs_trace.complete_wall("scrub_tick", t_s, scrub_s, track="job")
+
+    # job boundary: replication-controller quantum — the heat this job just
+    # wrote into the AccessLog moves replica COUNTS (add hot / retire cold)
+    if store.layout == "pax" and store.replicator is not None:
+        store.replicator.tick()
 
     mask = np.concatenate(masks, axis=0)
     out = {c: np.concatenate([d[c] for d in cols], axis=0)
@@ -535,7 +591,11 @@ def spmd_aggregate(mesh, key_col: jax.Array, val_col: jax.Array,
         from jax.experimental.shard_map import shard_map
 
     n_dev = mesh.shape[axis]
-    assert n_buckets % n_dev == 0
+    if n_dev <= 0 or n_buckets % n_dev != 0:
+        raise ValueError(
+            f"spmd_aggregate: n_buckets={n_buckets} must be a positive "
+            f"multiple of mesh axis {axis!r} size {n_dev} (each device "
+            f"reduces n_buckets/n_dev buckets after the all_to_all shuffle)")
     per_dev = n_buckets // n_dev
 
     def local(keys, vals, msk):

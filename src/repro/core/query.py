@@ -244,8 +244,9 @@ def read_hail(store: BlockStore, query: HailQuery, qplan: QueryPlan,
     rows = store.rows_per_block
     proj_cols = query.projection + (ROWID,)
     if len(ids) == 0:                # degenerate split: empty fixed-shape result
+        tmpl = store.template_replica()
         return ReadResult(
-            cols={c: jnp.zeros((0, rows), store.replicas[0].cols[c].dtype)
+            cols={c: jnp.zeros((0, rows), tmpl.cols[c].dtype)
                   for c in proj_cols},
             mask=jnp.zeros((0, rows), bool),
             rows_read_frac=jnp.zeros((0,), jnp.float32), bytes_read=0)
@@ -402,8 +403,9 @@ def attribution_groups(qplan: QueryPlan, block_ids: Sequence[int]
 def _empty_read(store: BlockStore, proj_cols: tuple,
                 rows: int) -> ReadResult:
     """Degenerate split: empty fixed-shape result."""
+    tmpl = store.template_replica()
     return ReadResult(
-        cols={c: jnp.zeros((0, rows), store.replicas[0].cols[c].dtype)
+        cols={c: jnp.zeros((0, rows), tmpl.cols[c].dtype)
               for c in proj_cols},
         mask=jnp.zeros((0, rows), bool),
         rows_read_frac=jnp.zeros((0,), jnp.float32), bytes_read=0)
@@ -496,6 +498,121 @@ def read_hail_batch(store: BlockStore, queries: Sequence[HailQuery],
         for qi in range(len(queries))]
     shared_bytes = frac.max(axis=1).sum() * col_bytes * (1 + len(proj))
     return results, shared_bytes
+
+
+def gather_shared_scan_inputs(store: BlockStore,
+                              queries: Sequence[HailQuery],
+                              qplan: QueryPlan,
+                              block_ids: Sequence[int]):
+    """Pre-gathered fused-reader inputs for ONE split of a (possibly
+    sharded) shared scan: (mins, keys, proj, bad, use_index).
+
+    This is the host-side half of the fused read — BlockCache traffic,
+    read-path checksum verification (raising ``CorruptBlockError`` exactly
+    like the unsharded readers, so executors keep their quarantine/re-plan
+    handling per split), and governor attribution all happen HERE; the wave
+    executor then ships many splits' inputs in one sharded dispatch."""
+    ids = np.asarray(block_ids)
+    col = queries[0].filter_col
+    assert col is not None and store.layout == "pax"
+    proj_cols = tuple(queries[0].projection) + (ROWID,)
+    return _gather_split_inputs(store, qplan, ids, col, proj_cols,
+                                n_queries=len(queries))
+
+
+def read_hail_batch_sharded(store: BlockStore,
+                            queries: Sequence[HailQuery],
+                            gathered: Sequence[tuple], mesh, axes
+                            ) -> list[tuple[list[ReadResult],
+                                            "int | jax.Array"]]:
+    """SHARDED shared-scan reader: ONE shard_map'd fused dispatch serves a
+    WAVE of up to n_dev splits, each split's block tile scanned on its own
+    device against the batch's replicated (Q, 2) ranges.
+
+    ``gathered`` holds per-split inputs from ``gather_shared_scan_inputs``
+    (1 <= len <= n_dev).  Ragged splits are padded to the wave's max block
+    count with DEAD blocks (bad=True rows — the kernel masks them to
+    False) and the wave is padded to n_dev splits, so every device runs
+    the identical program; outputs are sliced back per split, making the
+    row-sets byte-identical to len(gathered) single-device dispatches.
+    Returns one (results-per-query, shared_bytes) pair per split, shaped
+    exactly like ``read_hail_batch``'s return value.
+    """
+    from repro.kernels import ops
+    from repro.dist import sharding as dsh
+
+    assert store.layout == "pax" and len(queries) >= 1
+    col = queries[0].filter_col
+    assert col is not None, "shared-scan batches need a range filter"
+    proj = tuple(queries[0].projection)
+    proj_cols = proj + (ROWID,)
+    rows = store.rows_per_block
+    col_bytes = 4 * rows
+    n_dev = dsh.scan_device_count(mesh, axes)
+    n_splits = len(gathered)
+    assert 1 <= n_splits <= n_dev, (n_splits, n_dev)
+    n_q = len(queries)
+    lohi = np.asarray([[qq.filter[1], qq.filter[2]] for qq in queries],
+                      np.int32)
+
+    sizes = [int(g[0].shape[0]) for g in gathered]
+    bmax = max(sizes)
+    # scan-mode counters over REAL blocks only (padding must not skew the
+    # serial-equivalent accounting); the sharded ops wrapper counts waves
+    for g in gathered:
+        u = np.asarray(g[4])
+        n_idx = int(u.astype(bool).sum())
+        ops.DISPATCH_COUNTS["index_scan_blocks"] += n_q * n_idx
+        ops.DISPATCH_COUNTS["full_scan_blocks"] += n_q * (u.shape[0] - n_idx)
+
+    def _pad(g):
+        mins, keys, proj_a, bad, uidx = g
+        extra = bmax - mins.shape[0]
+        if extra == 0:
+            return mins, keys, proj_a, bad, np.asarray(uidx, np.int32)
+        return (jnp.concatenate(
+                    [mins, jnp.zeros((extra,) + mins.shape[1:], mins.dtype)]),
+                jnp.concatenate(
+                    [keys, jnp.zeros((extra,) + keys.shape[1:], keys.dtype)]),
+                jnp.concatenate(
+                    [proj_a,
+                     jnp.zeros((extra,) + proj_a.shape[1:], proj_a.dtype)]),
+                jnp.concatenate(
+                    [bad, jnp.ones((extra,) + bad.shape[1:], bool)]),
+                np.concatenate([np.asarray(uidx, np.int32),
+                                np.zeros((extra,), np.int32)]))
+
+    padded = [_pad(g) for g in gathered]
+    while len(padded) < n_dev:        # dead dummy splits fill the mesh
+        mins0, keys0, proj0, bad0, _ = padded[0]
+        padded.append((jnp.zeros_like(mins0), jnp.zeros_like(keys0),
+                       jnp.zeros_like(proj0), jnp.ones_like(bad0),
+                       np.zeros((bmax,), np.int32)))
+    mins = jnp.concatenate([p[0] for p in padded], axis=0)
+    keys = jnp.concatenate([p[1] for p in padded], axis=0)
+    proj_arr = jnp.concatenate([p[2] for p in padded], axis=0)
+    bad = jnp.concatenate([p[3] for p in padded], axis=0)
+    uidx = np.concatenate([p[4] for p in padded], axis=0)
+
+    mask, out, frac = ops.hail_read_batch_sharded(
+        mins, keys, proj_arr, bad, uidx, lohi,
+        partition_size=store.partition_size, mesh=mesh, axes=axes,
+        n_splits=n_splits)
+
+    outs = []
+    for s in range(n_splits):
+        sl = slice(s * bmax, s * bmax + sizes[s])
+        cols = {c: out[sl, :, j] for j, c in enumerate(proj_cols)}
+        m, fr = mask[sl], frac[sl]
+        results = [
+            ReadResult(cols=cols, mask=m[..., qi],
+                       rows_read_frac=fr[:, qi],
+                       bytes_read=fr[:, qi].sum() * col_bytes
+                       * (1 + len(proj)))
+            for qi in range(n_q)]
+        shared = fr.max(axis=1).sum() * col_bytes * (1 + len(proj))
+        outs.append((results, shared))
+    return outs
 
 
 @functools.lru_cache(maxsize=None)

@@ -102,6 +102,15 @@ class Namenode:
         self.dir_rep[(block_id, node)] = dataclasses.replace(
             info, sort_key=sort_key)
 
+    def unregister(self, block_id: int, node: int):
+        """Decommission: drop one replica's (block, node) registration —
+        Dir_block, Dir_rep and any quarantine record for the pair."""
+        nodes = self.dir_block.get(block_id, [])
+        if node in nodes:
+            nodes.remove(node)
+        self.dir_rep.pop((block_id, node), None)
+        self.quarantined.discard((block_id, node))
+
     def kill_node(self, node: int):
         self.dead.add(node)
 
@@ -130,6 +139,10 @@ class Replica:
     checksums: dict[str, jax.Array]        # col -> (n_blocks, n_chunks) u32
     nodes: np.ndarray                      # (n_blocks,) datanode per block
     indexed: Optional[np.ndarray] = None   # (n_blocks,) bool per-block state
+    retired: bool = False                  # decommissioned TOMBSTONE: the
+    #   slot stays (replica ids are baked into caches, the AccessLog and
+    #   recorded plans) but planning, repair, scrubbing and byte accounting
+    #   all skip it; its columns are dropped
 
     def __post_init__(self):
         if self.indexed is None:
@@ -180,6 +193,9 @@ class BlockStore:
     result_cache: Any = None               # cache.ResultCache when a serving
     #   layer caches materialized answers — dropped wholesale by every
     #   destructive transition (and keyed by ``version`` as a backstop)
+    replicator: Any = None                 # governor.ReplicationController
+    #   when heat-driven dynamic replication is attached (ticks at
+    #   job/flush boundaries like the scrubber)
     version: int = 0                       # bumped by every destructive
     #   transition; part of the result-cache key, so answers filled against
     #   an older store state are structurally unreachable
@@ -196,6 +212,18 @@ class BlockStore:
     def replication(self) -> int:
         return len(self.replicas)
 
+    def live_replica_ids(self) -> list[int]:
+        """Replica slots that are not decommissioned tombstones."""
+        return [i for i, r in enumerate(self.replicas) if not r.retired]
+
+    def template_replica(self) -> Replica:
+        """A live replica to read schema/dtype metadata from (replica 0
+        may be a retired tombstone with its columns dropped)."""
+        for r in self.replicas:
+            if not r.retired:
+                return r
+        raise ValueError("store has no live replicas")
+
     def replica_for(self, key: str) -> Optional[int]:
         """Replica to READ a ``key`` index from: when several replicas share
         a sort_key (possible after demote→re-claim leaves one mid-re-key),
@@ -203,7 +231,7 @@ class BlockStore:
         the most blocks for index scan; ties go to the lowest id."""
         best, best_frac = None, -1.0
         for i, r in enumerate(self.replicas):
-            if r.sort_key == key:
+            if not r.retired and r.sort_key == key:
                 frac = float(r.indexed.mean()) if len(r.indexed) else 0.0
                 if frac > best_frac:
                     best, best_frac = i, frac
@@ -218,6 +246,8 @@ class BlockStore:
         reads on."""
         out = []
         for i, r in enumerate(self.replicas):
+            if r.retired:
+                continue
             node = int(r.nodes[block_id])
             if (node not in self.namenode.dead
                     and not self.namenode.is_quarantined(block_id, node)):
@@ -308,7 +338,7 @@ class BlockStore:
         stats = RepairStats()
         by_rep: dict[int, list[int]] = {}
         node_rep = {(b, int(r.nodes[b])): i
-                    for i, r in enumerate(self.replicas)
+                    for i, r in enumerate(self.replicas) if not r.retired
                     for b in range(self.n_blocks)}
         for (b, node) in sorted(self.namenode.quarantined):
             rid = node_rep.get((b, node))
@@ -379,7 +409,7 @@ class BlockStore:
         if self.layout != "pax":
             return None
         for i, r in enumerate(self.replicas):
-            if r.sort_key is None:
+            if not r.retired and r.sort_key is None:
                 return i
         return None
 
@@ -521,11 +551,147 @@ class BlockStore:
             self.governor.note_demotion(replica_id, old_key, dropped)
         return dropped
 
+    # -- dynamic replication: replica COUNT follows measured heat -----------
+
+    def add_replica(self, n_nodes: Optional[int] = None) -> int:
+        """Scale-UP arm of dynamic replication: clone the dataset into a
+        fresh, UNCLAIMED replica in upload order — claimable by the next
+        adaptive job for whatever column is hot (the HAIL win: every
+        replica carries its own clustered index, so adding a replica adds
+        an index *slot*, not just read bandwidth).
+
+        Per block, the first healthy (alive, unquarantined) replica
+        donates; donor rows return to upload order by sorting on the
+        logical ``__rowid__`` column (the same device-side un-sort repair
+        and demotion use — identity for unindexed donors), and checksums
+        are recomputed for the restored byte order.  Placement stays
+        consistent with ``assign_nodes``: block b lands on
+        ``(b + slot) % n_nodes`` for the lowest node-offset ``slot`` no
+        live replica occupies, preserving the distinct-nodes invariant.
+
+        Appending is NON-destructive — planning prefers the lowest alive
+        id for full scans and the new replica is unindexed, so no existing
+        plan, cached gather or materialized answer changes meaning; the
+        store version is untouched.  Returns the new replica id.
+        """
+        from repro.kernels import ops
+        assert self.layout == "pax", "dynamic replication targets PAX stores"
+        live = self.live_replica_ids()
+        if n_nodes is None:
+            n_nodes = max(int(self.replicas[i].nodes.max())
+                          for i in live) + 1
+        taken = {int(self.replicas[i].nodes[0]) % n_nodes for i in live}
+        free = [s for s in range(n_nodes) if s not in taken]
+        if not free:
+            raise ValueError(
+                f"cannot add replica: all {n_nodes} node offsets hold a "
+                f"live replica (replication would exceed cluster size)")
+        slot = free[0]
+        donor = np.empty(self.n_blocks, dtype=np.int64)
+        for b in range(self.n_blocks):
+            alive = self.alive_replica_ids(b)
+            if not alive:
+                raise ValueError(
+                    f"cannot add replica: block {b} has no healthy copy "
+                    f"to clone from")
+            donor[b] = alive[0]
+        tmpl = self.template_replica()
+        rows = self.rows_per_block
+        new_cols = {c: jnp.zeros((self.n_blocks, rows), v.dtype)
+                    for c, v in tmpl.cols.items()}
+        for rid in np.unique(donor):
+            bsel = np.nonzero(donor == rid)[0]
+            src = self.replicas[int(rid)]
+            # donor -> upload order via logical row identity (one batched
+            # device sort per donor replica, not one per block)
+            _, up, _ = ops.sort_block(
+                src.cols[ROWID][bsel],
+                {c: v[bsel] for c, v in src.cols.items()})
+            new_cols = {c: new_cols[c].at[bsel].set(up[c])
+                        for c in new_cols}
+        new_sums = {c: jax.vmap(ck.chunk_checksums)(v)
+                    for c, v in new_cols.items()}
+        nodes = np.array([(b % n_nodes + slot) % n_nodes
+                          for b in range(self.n_blocks)], dtype=np.int64)
+        rep = Replica(sort_key=None, cols=new_cols,
+                      mins=jnp.zeros(
+                          (self.n_blocks, rows // self.partition_size),
+                          jnp.int32),
+                      checksums=new_sums, nodes=nodes)
+        self.replicas.append(rep)
+        rid = len(self.replicas) - 1
+        per_block_bytes = rep.nbytes // self.n_blocks
+        for b in range(self.n_blocks):
+            self.namenode.register(ReplicaInfo(
+                block_id=b, node=int(nodes[b]), sort_key=None,
+                partition_size=self.partition_size, n_rows=rows,
+                layout="pax", nbytes=per_block_bytes))
+        ops.DISPATCH_COUNTS["replicas_added"] += 1
+        from repro.obs import trace as obs_trace
+        obs_trace.instant("add_replica", track="store",
+                          args={"replica": rid, "node_offset": slot})
+        return rid
+
+    def decommission_replica(self, replica_id: int) -> int:
+        """Scale-DOWN arm of dynamic replication: retire a cold replica —
+        a DESTRUCTIVE transition like demotion, but terminal.
+
+        The replica becomes a tombstone: its slot stays (replica ids are
+        baked into caches, the AccessLog and recorded plans — removal
+        would silently re-key every later replica) but ``retired`` drops
+        it from planning, repair, scrubbing and byte accounting, its
+        columns/checksums are freed, and the namenode unregisters every
+        (block, node) pair — including quarantined ones, so a replica
+        rotting in quarantine can still be decommissioned.  Bumps
+        ``store.version`` and invalidates both cache tiers.
+
+        Refuses (typed ``ValueError``) when any block would lose its last
+        healthy copy.  Returns the number of per-block indexes dropped.
+        """
+        assert self.layout == "pax", "dynamic replication targets PAX stores"
+        rep = self.replicas[replica_id]
+        if rep.retired:
+            raise ValueError(f"replica {replica_id} is already retired")
+        for b in range(self.n_blocks):
+            others = [i for i in self.alive_replica_ids(b)
+                      if i != replica_id]
+            if not others:
+                raise ValueError(
+                    f"cannot decommission replica {replica_id}: block {b} "
+                    f"would lose its last healthy copy")
+        dropped = (int(rep.indexed.sum())
+                   if rep.sort_key is not None else 0)
+        for b in range(self.n_blocks):
+            self.namenode.unregister(b, int(rep.nodes[b]))
+        rep.retired = True
+        rep.sort_key = None
+        rep.indexed = np.zeros(self.n_blocks, dtype=bool)
+        rep.cols = {}
+        rep.checksums = {}
+        rep.mins = None
+        self.__dict__.get("_bad_mask_cache", {}).pop(replica_id, None)
+        if self.block_cache is not None:
+            self.block_cache.invalidate_replica(replica_id)
+        self._note_destructive()
+        if self.access_log is not None:
+            self.access_log.forget_replica(replica_id)
+        from repro.kernels import ops
+        ops.DISPATCH_COUNTS["replicas_decommissioned"] += 1
+        from repro.obs import trace as obs_trace
+        obs_trace.instant("decommission_replica", track="store",
+                          args={"replica": replica_id,
+                                "indexes_dropped": dropped})
+        return dropped
+
 
 def assign_nodes(n_blocks: int, replication: int, n_nodes: int) -> np.ndarray:
     """(replication, n_blocks) datanode placement: replicas of a block land
     on distinct nodes (HDFS invariant), blocks round-robin."""
-    assert replication <= n_nodes, "replication must be <= cluster size"
+    if replication > n_nodes:
+        raise ValueError(
+            f"replication={replication} exceeds cluster size "
+            f"n_nodes={n_nodes}: replicas of a block must land on "
+            f"distinct nodes")
     out = np.zeros((replication, n_blocks), dtype=np.int64)
     for b in range(n_blocks):
         base = b % n_nodes

@@ -6,9 +6,11 @@ logical axes to *mesh* axes by priority rules with divisibility fallbacks:
 
 * a rule lists candidate mesh axes per logical axis, best first; a candidate
   may be a COMPOUND tuple like ("pod", "data") meaning shard over both;
-* mesh axes absent from the mesh are dropped from a candidate; for compound
-  candidates the longest PREFIX whose size product divides the dimension is
-  used (batch=2 on a (pod=2, data=16) mesh shards over just "pod");
+* mesh axes absent from the mesh — or of size 1, which shard nothing — are
+  dropped from a candidate; for compound candidates the longest PREFIX whose
+  size product divides the dimension is used (batch=2 on a (pod=2, data=16)
+  mesh shards over just "pod", and ("pod", "data") with pod=1 canonicalises
+  to plain "data");
 * a mesh axis is used at most once per tensor — later logical axes fall
   through to their next candidate or stay replicated;
 * anything that doesn't divide evenly stays replicated (never errors).
@@ -119,8 +121,12 @@ RULE_PRESETS: dict[str, dict[str, tuple]] = {
     "baseline": DEFAULT_RULES,
     # pure data-parallel: weights replicated, only batch-ish axes sharded
     "dp_only": {"batch": (("pod", "data"), "data"), "kv_seq": ("data",)},
-    # fsdp-flavoured: shard the embed dimension of weights over data too
-    "fsdp": {**DEFAULT_RULES, "embed": ("data",), "vocab": ("model", "data")},
+    # fsdp-flavoured: fully shard the embed dimension of weights — over the
+    # COMPOUND (data, model) grid when the dim divides, falling back to
+    # data alone.  (Plain ("data",) would be byte-identical to
+    # DEFAULT_RULES, making the preset a no-op for embed.)
+    "fsdp": {**DEFAULT_RULES, "embed": (("data", "model"), "data"),
+             "vocab": ("model", "data")},
 }
 
 
@@ -141,9 +147,12 @@ def resolve_pspec(shape: Sequence[int], axes: Sequence[Optional[str]],
         entry = None
         for cand in rules.get(name, ()) if name else ():
             cand_axes = (cand,) if isinstance(cand, str) else tuple(cand)
-            # drop mesh axes that don't exist or are already used
+            # drop mesh axes that don't exist, shard nothing (size 1), or
+            # are already used — a size-1 axis kept inside a compound
+            # prefix would yield non-canonical specs (("pod", "data") with
+            # pod=1 instead of plain "data") and burn the axis via `used`
             cand_axes = tuple(a for a in cand_axes
-                              if a in sizes and a not in used)
+                              if sizes.get(a, 1) > 1 and a not in used)
             if not cand_axes:
                 continue
             # longest prefix whose size product divides the dimension
@@ -160,6 +169,31 @@ def resolve_pspec(shape: Sequence[int], axes: Sequence[Optional[str]],
     while entries and entries[-1] is None:   # trim for clean equality
         entries.pop()
     return P(*entries)
+
+
+def scan_mesh_axes(mesh, rules: Optional[dict] = None) -> tuple[str, ...]:
+    """Mesh axes the fused reader's split dimension shards over.
+
+    Resolves the scan grid's logical "batch" axis against ``mesh`` with the
+    same candidate rules as ``resolve_pspec`` (presets apply) but WITHOUT a
+    divisibility test — the wave executor pads the split dimension up to
+    the axis product itself.  Size-1 axes are dropped, so a (1, 1) host
+    mesh yields ``()`` and callers fall back to the single-device path.
+    """
+    rules = DEFAULT_RULES if rules is None else rules
+    sizes = _mesh_sizes(mesh)
+    for cand in rules.get("batch", ()):
+        cand_axes = (cand,) if isinstance(cand, str) else tuple(cand)
+        cand_axes = tuple(a for a in cand_axes if sizes.get(a, 1) > 1)
+        if cand_axes:
+            return cand_axes
+    return ()
+
+
+def scan_device_count(mesh, axes: Sequence[str]) -> int:
+    """Number of devices the scan grid spans on ``axes`` of ``mesh``."""
+    sizes = _mesh_sizes(mesh)
+    return int(math.prod(sizes[a] for a in axes)) if axes else 1
 
 
 def named_sharding(spec: TensorSpec, mesh, rules=None) -> NamedSharding:

@@ -289,6 +289,66 @@ def hail_read_batch(mins, keys, proj, bad, use_index, lohi, *,
               jnp.asarray(lohi), partition_size=partition_size)
 
 
+@functools.lru_cache(maxsize=None)
+def _sharded_batch_reader(mesh, axes: tuple, partition_size: int,
+                          use_kernels: bool, interpret: bool):
+    """shard_map'd fused batch reader, compiled once per (mesh, axes,
+    partition_size, backend) — the kernel/interpret flags are CACHE KEYS
+    here (not baked globals), so ``set_interpret``/``use_kernels`` flips
+    pick a fresh entry without any cache clearing."""
+    try:
+        from jax import shard_map                      # jax >= 0.6
+    except ImportError:
+        from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    spec = P(axes if len(axes) > 1 else axes[0])
+
+    def local(mins, keys, proj, bad, use_index, lohi):
+        TRACE_COUNTS["hail_read_sharded"] += 1
+        if use_kernels:
+            return _hail_read_batch(mins, keys, proj, bad, use_index, lohi,
+                                    partition_size=partition_size,
+                                    interpret=interpret)
+        return ref.hail_read_batch(mins, keys, proj, bad, use_index, lohi,
+                                   partition_size=partition_size)
+
+    # block dim sharded over the scan axes; the (Q, 2) ranges replicated.
+    # check_rep=False: outputs are per-shard block tiles, no replication
+    # invariant for the checker to prove through the pallas call.
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(spec, spec, spec, spec, spec, P()),
+                   out_specs=(spec, spec, spec), check_rep=False)
+    return jax.jit(fn)
+
+
+def hail_read_batch_sharded(mins, keys, proj, bad, use_index, lohi, *,
+                            partition_size: int, mesh, axes,
+                            n_splits: int = 1):
+    """Sharded fused reader: ONE dispatch per WAVE of up to n_dev splits.
+
+    The leading (block) dim must equal ``n_dev * blocks_per_device`` — the
+    wave assembler in core.query pads ragged splits with dead blocks and
+    stacks them — and is shard_map'd over ``axes`` of ``mesh``, so every
+    device scans its own split's block tile against the same replicated
+    (Q, 2) ranges.  Per-device fused dispatches therefore equal the wave
+    count = ceil(splits / n_dev).  Scan-mode counters are the CALLER's job
+    (only it knows which blocks are padding); this wrapper counts waves
+    and the splits they carry."""
+    axes = tuple(axes)
+    DISPATCH_COUNTS["hail_read_sharded_waves"] += 1
+    DISPATCH_COUNTS["hail_read_sharded_splits"] += int(n_splits)
+    _obs_trace.instant("hail_read_sharded", track="kernels", cat="dispatch",
+                       args={"splits": int(n_splits),
+                             "blocks": int(mins.shape[0]),
+                             "axes": ",".join(axes)})
+    fn = _sharded_batch_reader(mesh, axes, partition_size,
+                               _USE_KERNELS, _INTERPRET)
+    lohi = np.asarray(lohi, np.int32).reshape(-1, 2)
+    return fn(mins, keys, proj, bad,
+              jnp.asarray(np.asarray(use_index), jnp.int32),
+              jnp.asarray(lohi))
+
+
 def attention(q, k, v, *, causal=True, window=None):
     if _USE_KERNELS:
         return flash_attention(q, k, v, causal=causal, window=window,

@@ -290,6 +290,8 @@ def register_store(store, registry: Optional[MetricsRegistry] = None):
             for (rid, col), rec in log.counts.items():
                 r.gauge("governor.heat", replica=rid, column=col).set(
                     rec.hits + rec.misses)
+                r.gauge("governor.miss_heat", replica=rid, column=col).set(
+                    rec.misses)
                 r.gauge("governor.last_used", replica=rid, column=col).set(
                     rec.last_used)
             r.gauge("governor.job_clock").set(log.job_clock)
@@ -317,6 +319,8 @@ def register_store(store, registry: Optional[MetricsRegistry] = None):
         r.gauge("store.version").set(store.version)
         r.gauge("store.total_indexed_blocks").set(
             store.total_indexed_blocks() if store.layout == "pax" else 0)
+        if store.layout == "pax":
+            r.gauge("store.live_replicas").set(len(store.live_replica_ids()))
 
     reg.register_collector(_collect)
     return _collect

@@ -115,11 +115,17 @@ class ServerConfig:
     ``result_cache_bytes``: the materialized-answer tier, same knob shape
     (benches that measure the scan path itself disable it).  ``adaptive``:
     when set, flushes draw ONE shared build quantum (see module docstring).
+    ``mesh``: a ``jax.sharding.Mesh`` to SHARD each batch's fused scan
+    over — splits gather host-side as usual but dispatch in WAVES of up to
+    n_dev splits through one shard_map'd fused call (see
+    ``mapreduce.run_job``); meshes without a multi-device scan axis fall
+    back to the serial per-split dispatch.
     """
     max_batch: int = 8
     max_pending_per_tenant: int = 8
     max_pending_total: int = 64
     reader: str = "kernels"
+    mesh: Optional[object] = None
     cache: bool = True
     cache_bytes: Optional[int] = None
     result_cache: bool = True
@@ -410,6 +416,11 @@ class HailServer:
                 t_s = time.perf_counter()
                 self.store.scrubber.tick()
                 stats.scrub_s = time.perf_counter() - t_s
+            # flush boundary: replication-controller quantum (this flush's
+            # AccessLog heat moves replica counts — add hot / retire cold)
+            if (self.store.layout == "pax"
+                    and self.store.replicator is not None):
+                self.store.replicator.tick()
         cluster = self.config.cluster
         overhead = stats.n_splits * cluster.hail_sched_overhead_s
         disk_s = stats.bytes_read / (cluster.disk_bw * cluster.n_nodes)
@@ -513,7 +524,8 @@ class HailServer:
         splits for a query; the empty answer must still type-check against
         the schema, not collapse to int32)."""
         if self.store.layout == "pax":
-            return np.zeros((0,), self.store.replicas[0].cols[c].dtype)
+            return np.zeros((0,),
+                            self.store.template_replica().cols[c].dtype)
         if c == ROWID:
             return np.zeros((0,), np.int32)
         return np.zeros((0,), self.store.schema.col(c).dtype)
@@ -566,6 +578,34 @@ class HailServer:
                 adapt_rid = None             # already converged
 
         dispatched = []               # (results, shared_bytes, t, live qis)
+
+        # sharded scan: buffer up to n_dev gathered splits per wave and
+        # dispatch the wave as ONE shard_map'd fused call (mapreduce.run_job
+        # has the serial-equivalence argument: gathered inputs are
+        # snapshots, so buffering cannot change any split's row-set)
+        use_sharded = (self.config.mesh is not None
+                       and store.layout == "pax"
+                       and query0.filter is not None)
+        scan_axes: tuple = ()
+        n_dev = 1
+        if use_sharded:
+            from repro.dist import sharding as shd
+            scan_axes = shd.scan_mesh_axes(self.config.mesh)
+            n_dev = shd.scan_device_count(self.config.mesh, scan_axes)
+            use_sharded = bool(scan_axes) and n_dev > 1
+        wave: list[tuple] = []        # (live qis, gathered inputs)
+
+        def flush_wave():
+            if not wave:
+                return
+            out = q.read_hail_batch_sharded(store, queries,
+                                            [g for _, g in wave],
+                                            self.config.mesh, scan_axes)
+            for (live_qis, _), (res, shared) in zip(wave, out):
+                dispatched.append((res, shared, time.perf_counter(),
+                                   live_qis))
+            wave.clear()
+
         pending = list(splits)
         i = 0
         try:
@@ -589,8 +629,13 @@ class HailServer:
                     # rides it — skip the dispatch entirely
                     continue
                 try:
-                    res, shared = self._read_batch(queries, qplan,
-                                                   list(sp.block_ids))
+                    if use_sharded:
+                        gathered = q.gather_shared_scan_inputs(
+                            store, queries, qplan, list(sp.block_ids))
+                        res = shared = None
+                    else:
+                        res, shared = self._read_batch(queries, qplan,
+                                                       list(sp.block_ids))
                 except CorruptBlockError as e:
                     # quarantine at the namenode, re-plan against the
                     # smaller replica set, re-queue this split's blocks as
@@ -605,8 +650,11 @@ class HailServer:
                               index_scan=bool(qplan.index_scan[b]))
                         for b in sp.block_ids)
                     continue
-                dispatched.append((res, shared, time.perf_counter(),
-                                   tuple(live)))
+                if use_sharded:
+                    wave.append((tuple(live), gathered))
+                else:
+                    dispatched.append((res, shared, time.perf_counter(),
+                                       tuple(live)))
                 d_wall, demote_pending = demote_pending, 0.0
                 b_wall = 0.0
                 if adapt_rid is not None and budget["left"] > 0:
@@ -624,6 +672,9 @@ class HailServer:
                 n_idx = sum(bool(qplan.index_scan[b]) for b in sp.block_ids)
                 stats.split_scan_modes.append(
                     (n_idx, len(sp.block_ids) - n_idx))
+                if use_sharded and len(wave) == n_dev:
+                    flush_wave()
+            flush_wave()          # ragged final wave
         finally:
             if demote_pending > 0.0:
                 # no split carried the demotion wall the claim paid (every

@@ -72,8 +72,10 @@ class Scrubber:
         persistent cursor, skipping dead nodes (nothing to read) and
         already-quarantined blocks (known bad; repair handles them)."""
         store = self.store
-        pairs = [(r, b) for r in range(store.replication)
+        pairs = [(r, b) for r in store.live_replica_ids()
                  for b in range(store.n_blocks)]
+        if not pairs:
+            return []
         out = []
         for k in range(len(pairs)):
             if len(out) >= self.config.blocks_per_tick:

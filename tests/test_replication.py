@@ -1,0 +1,187 @@
+"""Dynamic replication: add_replica / decommission_replica store transitions
+and the heat-driven ReplicationController closing the loop at job boundaries
+(replacing the static factor-of-3 replication)."""
+import numpy as np
+import pytest
+
+from repro.core import governor as gvn
+from repro.core import mapreduce as mr
+from repro.core import query as q
+from repro.core import schema as sc
+from repro.core import upload as up
+from repro.core.parse import format_rows
+from repro.core.schema import ROWID
+from repro.obs.metrics import MetricsRegistry
+
+ROWS = 256
+BLOCKS = 4
+PART = 64
+
+
+@pytest.fixture()
+def two_rep_store():
+    """Fresh per-test store with TWO claimed replicas (visitDate, sourceIP)
+    on a 6-node cluster — adRevenue has no index slot until one is added."""
+    cols = sc.gen_uservisits(ROWS * BLOCKS, seed=11)
+    raw = format_rows(sc.USERVISITS, cols, bad_fraction=0.002)
+    store, _ = up.hail_upload(
+        sc.USERVISITS, raw.reshape(BLOCKS, ROWS, -1),
+        ["visitDate", "sourceIP"], partition_size=PART, n_nodes=6)
+    return store, cols
+
+
+Q_AD = q.HailQuery(filter=("adRevenue", 100, 5000),
+                   projection=("sourceIP",))
+Q_VD = q.HailQuery(filter=("visitDate", 7305, 7670),
+                   projection=("sourceIP",))
+Q_SIP = q.HailQuery(filter=("sourceIP", 0, 1 << 30),
+                    projection=("visitDate",))
+
+
+def test_add_replica_unclaimed_and_placed(two_rep_store):
+    store, _ = two_rep_store
+    v0 = store.version
+    base = mr.run_job(store, Q_AD).results["n_rows"]
+    rid = store.add_replica()
+    assert rid == 2
+    rep = store.replicas[rid]
+    # unclaimed (claimable by the next adaptive job for any hot column)
+    assert rep.sort_key is None and not rep.indexed.any()
+    assert store.adaptive_replica_for("adRevenue") == rid
+    # upload order restored from a SORTED donor: rowids ascend per block
+    rowid = np.asarray(rep.cols[ROWID])
+    assert (np.diff(rowid, axis=1) > 0).all()
+    # distinct-nodes invariant holds across all live replicas, per block
+    for b in range(store.n_blocks):
+        nodes = {int(store.replicas[i].nodes[b])
+                 for i in store.live_replica_ids()}
+        assert len(nodes) == 3
+    # NON-destructive: no version bump, row-sets unchanged
+    assert store.version == v0
+    assert mr.run_job(store, Q_AD).results["n_rows"] == base
+
+
+def test_add_replica_converges_adaptively(two_rep_store):
+    store, cols = two_rep_store
+    rid = store.add_replica()
+    adaptive = mr.AdaptiveConfig(offer_rate=1.0)
+    mr.run_job(store, Q_AD, adaptive=adaptive)      # claims + builds rid
+    assert store.replicas[rid].sort_key == "adRevenue"
+    assert store.replicas[rid].indexed.all()
+    post = mr.run_job(store, Q_AD, adaptive=adaptive)
+    assert post.full_scan_blocks == 0               # index scan now
+    want = ((cols["adRevenue"] >= 100) & (cols["adRevenue"] <= 5000))
+    # bad rows excluded by the store, so oracle is an upper bound tight to
+    # within the injected bad fraction
+    assert post.results["n_rows"] <= int(want.sum())
+
+
+def test_add_replica_exhausts_node_offsets(two_rep_store):
+    store, _ = two_rep_store
+    store.add_replica(n_nodes=3)                    # offset slot 2 of 3
+    with pytest.raises(ValueError, match="node offsets"):
+        store.add_replica(n_nodes=3)
+
+
+def test_decommission_is_destructive_and_safe(two_rep_store):
+    store, _ = two_rep_store
+    rid = store.add_replica()
+    base = mr.run_job(store, Q_AD).results["n_rows"]
+    v0 = store.version
+    dropped = store.decommission_replica(rid)
+    assert dropped == 0                             # never claimed
+    assert store.replicas[rid].retired
+    assert store.replicas[rid].cols == {}           # bytes freed
+    assert store.live_replica_ids() == [0, 1]
+    assert store.version > v0                       # caches invalidated
+    assert mr.run_job(store, Q_AD).results["n_rows"] == base
+    with pytest.raises(ValueError, match="already retired"):
+        store.decommission_replica(rid)
+    store.decommission_replica(1)
+    with pytest.raises(ValueError, match="last healthy copy"):
+        store.decommission_replica(0)
+
+
+def test_decommission_drops_indexes_and_counts_them(two_rep_store):
+    store, _ = two_rep_store
+    dropped = store.decommission_replica(1)         # sourceIP replica
+    assert dropped == store.n_blocks
+    assert store.adaptive_replica_for("sourceIP") is None
+
+
+def test_decommission_survives_quarantine(two_rep_store):
+    store, _ = two_rep_store
+    rid = store.add_replica()
+    node = int(store.replicas[rid].nodes[0])
+    store.quarantine_block(rid, 0)
+    assert store.namenode.is_quarantined(0, node)
+    store.decommission_replica(rid)                 # rot in quarantine: ok
+    assert not store.namenode.is_quarantined(0, node)
+    assert store.live_replica_ids() == [0, 1]
+
+
+def test_template_replica_survives_retirement(two_rep_store):
+    store, _ = two_rep_store
+    store.add_replica()
+    # retire replica 0: template/dtype lookups must not hit its freed cols
+    store.decommission_replica(0)
+    tmpl = store.template_replica()
+    assert tmpl.cols                                # a LIVE replica
+    assert mr.run_job(store, Q_VD).results["n_rows"] >= 0
+
+
+def test_controller_add_then_decommission_cycle(two_rep_store):
+    store, _ = two_rep_store
+    reg = MetricsRegistry()                         # isolated from REGISTRY
+    # cold_ticks must tolerate both the hot-phase rotation length and the
+    # claim window (an added replica serves no reads until the NEXT
+    # adaptive job claims and builds it)
+    ctl = gvn.replicate(store, min_replication=2, max_replication=5,
+                        hot_misses=1, cold_ticks=4, registry=reg)
+    assert store.replicator is ctl
+    adaptive = mr.AdaptiveConfig(offer_rate=1.0)
+
+    # hot phase: adRevenue misses (both replicas claimed elsewhere) -> the
+    # job-boundary tick adds a replica; the NEXT adaptive job claims it.
+    # Q_VD/Q_SIP interleave so the ORIGINAL replicas stay warm throughout.
+    mr.run_job(store, Q_AD, adaptive=adaptive)
+    assert ctl.replicas_added == 1
+    new_rid = ctl.events[0].replica_id
+    assert ctl.events[0].column == "adRevenue"
+    assert store.replicas[new_rid].sort_key is None
+    mr.run_job(store, Q_VD, adaptive=adaptive)
+    mr.run_job(store, Q_SIP, adaptive=adaptive)
+    mr.run_job(store, Q_AD, adaptive=adaptive)      # claims + builds new_rid
+    assert store.replicas[new_rid].sort_key == "adRevenue"
+    assert ctl.replicas_added == 1                  # claimed: no second add
+    post = mr.run_job(store, Q_AD, adaptive=adaptive)
+    assert post.full_scan_blocks == 0               # index scan on new_rid
+    assert ctl.replicas_decommissioned == 0         # every replica warm
+
+    # shifted phase: adRevenue vanishes from the workload — new_rid's heat
+    # delta stays 0 for cold_ticks consecutive boundaries -> retired, while
+    # the still-hot visitDate/sourceIP replicas survive
+    for _ in range(4):
+        mr.run_job(store, Q_VD, adaptive=adaptive)
+        mr.run_job(store, Q_SIP, adaptive=adaptive)
+    assert ctl.replicas_decommissioned == 1
+    assert ctl.events[-1].replica_id == new_rid
+    assert store.replicas[new_rid].retired
+    assert store.live_replica_ids() == [0, 1]
+    # floor respected forever after
+    for _ in range(4):
+        mr.run_job(store, Q_VD, adaptive=adaptive)
+    assert store.live_replica_ids() == [0, 1]
+    ctl.detach()
+    assert store.replicator is None
+
+
+def test_controller_respects_max_replication(two_rep_store):
+    store, _ = two_rep_store
+    reg = MetricsRegistry()
+    ctl = gvn.replicate(store, max_replication=2, hot_misses=1,
+                        registry=reg)
+    mr.run_job(store, Q_AD, adaptive=mr.AdaptiveConfig(offer_rate=1.0))
+    mr.run_job(store, Q_AD, adaptive=mr.AdaptiveConfig(offer_rate=1.0))
+    assert ctl.replicas_added == 0                  # at the ceiling
+    assert store.live_replica_ids() == [0, 1]

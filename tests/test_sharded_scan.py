@@ -1,0 +1,87 @@
+"""Sharded flush scans: wave reader equality on one device (shard_map over a
+size-1 axis, in-process) and the full 8-device property test (subprocess —
+conftest forbids XLA_FLAGS in this process, and the forced host device count
+must be set before any jax import)."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import query as q
+from repro.core.splitting import hail_splits
+from repro.launch.mesh import make_mesh
+
+Q1 = q.HailQuery(filter=("visitDate", 7305, 7670), projection=("sourceIP",))
+Q2 = q.HailQuery(filter=("visitDate", 7400, 7500), projection=("sourceIP",))
+
+
+def test_wave_reader_matches_batch_reader(hail_store):
+    """read_hail_batch_sharded over a size-1 'data' axis must reproduce the
+    unsharded fused batch reader split by split: same masks, same projected
+    values under the mask, same bytes accounting."""
+    mesh = make_mesh((1,), ("data",))
+    queries = [Q1, Q2]
+    qplan = q.plan(hail_store, Q1)
+    splits = hail_splits(hail_store, qplan, 4)
+    assert len(splits) >= 2
+    for sp in splits:
+        ids = list(sp.block_ids)
+        gathered = q.gather_shared_scan_inputs(hail_store, queries, qplan,
+                                               ids)
+        [(sharded, sh_bytes)] = q.read_hail_batch_sharded(
+            hail_store, queries, [gathered], mesh, ("data",))
+        serial, se_bytes = q.read_hail_batch(hail_store, queries, qplan, ids)
+        assert float(sh_bytes) == float(se_bytes)
+        for rs, rb in zip(sharded, serial):
+            ms, mb = np.asarray(rs.mask), np.asarray(rb.mask)
+            np.testing.assert_array_equal(ms, mb)
+            assert float(rs.bytes_read) == float(rb.bytes_read)
+            for c in rs.cols:
+                np.testing.assert_array_equal(
+                    np.asarray(rs.cols[c])[mb], np.asarray(rb.cols[c])[mb])
+
+
+def test_wave_reader_pads_ragged_wave(hail_store):
+    """A wave whose splits have different block counts pads with DEAD blocks;
+    padded rows must contribute no matches and no bytes."""
+    mesh = make_mesh((1,), ("data",))
+    qplan = q.plan(hail_store, Q1)
+    ids = [0, 2]                      # 2-block split alone in the wave
+    gathered = q.gather_shared_scan_inputs(hail_store, [Q1], qplan, ids)
+    [(sharded, _)] = q.read_hail_batch_sharded(hail_store, [Q1], [gathered],
+                                               mesh, ("data",))
+    serial, _ = q.read_hail_batch(hail_store, [Q1], qplan, ids)
+    np.testing.assert_array_equal(np.asarray(sharded[0].mask),
+                                  np.asarray(serial[0].mask))
+
+
+def test_run_job_falls_back_without_scan_axis(hail_store):
+    """A (1, 1) host mesh has no multi-device scan axis: run_job must take
+    the serial path and produce identical stats shape."""
+    from repro.core import mapreduce as mr
+    from repro.launch.mesh import make_host_mesh
+    base = mr.run_job(hail_store, Q1)
+    via_mesh = mr.run_job(hail_store, Q1, mesh=make_host_mesh())
+    assert via_mesh.results["n_rows"] == base.results["n_rows"]
+    assert via_mesh.n_tasks == base.n_tasks
+
+
+def test_sharded_flush_property_8dev():
+    """Randomized 8-device property test: sharded flush row-sets equal the
+    uncached oracle across interleaved commits, demotions, quarantines,
+    re-replications and a mid-flush failover; per-device fused dispatches
+    follow the ceil(splits / n_dev) model."""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)        # the worker sets its own, pre-import
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(os.path.dirname(__file__),
+                                      "sharded_worker.py")],
+        env=env, capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    assert "PASS dispatch-model" in proc.stdout
+    assert "PASS oracle-equality" in proc.stdout

@@ -3,11 +3,13 @@ axes, per-tensor uniqueness — against fake production-shaped meshes."""
 import dataclasses
 
 import numpy as np
+import pytest
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.dist.sharding import (DEFAULT_RULES, TensorSpec, param_bytes,
-                                 param_count, resolve_pspec, tspec)
+from repro.dist.sharding import (DEFAULT_RULES, RULE_PRESETS, TensorSpec,
+                                 param_bytes, param_count, resolve_pspec,
+                                 scan_device_count, scan_mesh_axes, tspec)
 
 
 @dataclasses.dataclass
@@ -18,6 +20,8 @@ class FakeMesh:
 
 SINGLE = FakeMesh(("data", "model"), np.zeros((16, 16)))
 MULTI = FakeMesh(("pod", "data", "model"), np.zeros((2, 16, 16)))
+POD1 = FakeMesh(("pod", "data", "model"), np.zeros((1, 16, 16)))
+HOST = FakeMesh(("data", "model"), np.zeros((1, 1)))
 
 
 def test_batch_uses_pod_and_data_on_multipod():
@@ -76,3 +80,75 @@ def test_param_accounting():
             "b": tspec((8,), ("act_embed",), jnp.bfloat16)}
     assert param_count(spec) == 40
     assert param_bytes(spec) == 4 * 8 * 4 + 8 * 2
+
+
+def test_presets_differ_from_baseline_on_production_mesh():
+    # every non-baseline preset must CHANGE at least one resolution on the
+    # production mesh, else the --rules flag is a silent no-op (the fsdp
+    # preset's embed entry used to be byte-identical to DEFAULT_RULES)
+    witnesses = [((4096, 4096), ("embed", "mlp")),
+                 ((262144, 2560), ("vocab", "embed")),
+                 ((256, 4096), ("batch", "seq"))]
+    for name, rules in RULE_PRESETS.items():
+        if name == "baseline":
+            continue
+        assert any(
+            resolve_pspec(shape, axes, SINGLE, rules)
+            != resolve_pspec(shape, axes, SINGLE) for shape, axes in
+            witnesses), f"preset {name!r} is a no-op on the production mesh"
+
+
+def test_fsdp_embed_shards_compound():
+    # fsdp fully shards the weight embed dim over the (data, model) grid
+    ps = resolve_pspec((4096, 4096), ("embed", "mlp"), SINGLE,
+                       RULE_PRESETS["fsdp"])
+    assert ps == P(("data", "model"))
+    assert resolve_pspec((4096, 4096), ("embed", "mlp"), SINGLE) \
+        == P("data", "model")
+
+
+def test_size1_axis_dropped_from_compound():
+    # pod=1 shards nothing: ("pod", "data") canonicalises to plain "data",
+    # and the unused 'pod' must NOT be burned for later logical axes
+    ps = resolve_pspec((256, 4096), ("batch", "seq"), POD1)
+    assert ps == P("data")
+    # batch=2 divides pod(=2) on MULTI but nothing on POD1 -> replicated,
+    # never a non-canonical (("pod",),) entry
+    assert resolve_pspec((2, 128), ("batch", "seq"), POD1) == P()
+
+
+def test_size1_axis_dropped_single_candidate():
+    # on a (1, 1) host mesh every candidate shards nothing -> replicated
+    assert resolve_pspec((256, 4096), ("batch", "seq"), HOST) == P()
+    assert resolve_pspec((262144, 2560), ("vocab", "embed"), HOST) == P()
+
+
+def test_scan_mesh_axes():
+    assert scan_mesh_axes(MULTI) == ("pod", "data")
+    assert scan_mesh_axes(POD1) == ("data",)
+    assert scan_mesh_axes(SINGLE) == ("data",)
+    assert scan_mesh_axes(HOST) == ()       # callers fall back to serial
+    assert scan_device_count(MULTI, ("pod", "data")) == 32
+    assert scan_device_count(HOST, ()) == 1
+
+
+def test_spmd_aggregate_bucket_mismatch_is_typed():
+    from repro.core import mapreduce as mr
+
+    @dataclasses.dataclass
+    class FourDev:               # the check fires before shard_map is built
+        shape: dict
+
+    k = jnp.zeros((2, 8), jnp.int32)
+    v = jnp.zeros((2, 8), jnp.float32)
+    m = jnp.ones((2, 8), bool)
+    with pytest.raises(ValueError, match=r"n_buckets=7.*'data' size 4"):
+        mr.spmd_aggregate(FourDev({"data": 4}), k, v, m, n_buckets=7,
+                          axis="data")
+
+
+def test_assign_nodes_overreplication_is_typed():
+    from repro.core.store import assign_nodes
+    with pytest.raises(ValueError, match=r"replication=4.*n_nodes=3"):
+        assign_nodes(8, replication=4, n_nodes=3)
+    assert assign_nodes(8, replication=3, n_nodes=3).shape == (3, 8)
